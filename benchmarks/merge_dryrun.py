@@ -1,0 +1,57 @@
+"""Merge partial dry-run JSONs (the sweep runs in chunks on this box) into
+the canonical ``dryrun_single.json`` consumed by the roofline report.
+
+    PYTHONPATH=src python -m benchmarks.merge_dryrun \
+        benchmarks/results/dryrun_part*.json \
+        -o benchmarks/results/dryrun_single.json
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+
+from repro.config import INPUT_SHAPES
+from repro.configs import arch_ids
+
+SHAPE_ORDER = list(INPUT_SHAPES)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("parts", nargs="+")
+    ap.add_argument("-o", "--out", required=True)
+    args = ap.parse_args()
+
+    by_pair = {}
+    for pattern in args.parts:
+        for path in sorted(glob.glob(pattern)):
+            with open(path) as f:
+                for rec in json.load(f):
+                    key = (rec["arch"], rec["shape"])
+                    # later files win (re-runs supersede)
+                    by_pair[key] = rec
+
+    ordered = []
+    missing = []
+    for arch in arch_ids():
+        for shape in SHAPE_ORDER:
+            rec = by_pair.get((arch, shape))
+            if rec is None:
+                missing.append((arch, shape))
+            else:
+                ordered.append(rec)
+    with open(args.out, "w") as f:
+        json.dump(ordered, f, indent=1)
+    ok = sum(r["status"] == "ok" for r in ordered)
+    sk = sum(r["status"] == "skipped" for r in ordered)
+    er = sum(r["status"] == "error" for r in ordered)
+    print(f"merged {len(ordered)} records -> {args.out} "
+          f"({ok} ok / {sk} skipped / {er} error)")
+    if missing:
+        print(f"MISSING {len(missing)} pairs: {missing}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

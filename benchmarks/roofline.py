@@ -1,0 +1,106 @@
+"""Roofline report (deliverable g) — renders the dry-run JSON into the
+EXPERIMENTS.md §Roofline table.
+
+Reads ``benchmarks/results/dryrun_single.json`` (and the multi-pod JSON if
+present) produced by ``repro.launch.dryrun`` and emits a markdown table with
+the three roofline terms, the dominant bottleneck, and the useful-compute
+ratio per (arch x shape).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+from benchmarks.common import RESULTS_DIR, fmt_table
+
+SINGLE = os.path.join(RESULTS_DIR, "dryrun_single.json")
+MULTI = os.path.join(RESULTS_DIR, "dryrun_multi.json")
+
+
+def _fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.0f}us"
+    if x < 1:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def load(path: str) -> Optional[List[Dict[str, Any]]]:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows_for(results: List[Dict[str, Any]]) -> List[List[Any]]:
+    rows = []
+    for r in results:
+        if r["status"] == "skipped":
+            rows.append([r["arch"], r["shape"], "SKIP", "-", "-", "-", "-",
+                         "-", "-"])
+            continue
+        if r["status"] != "ok":
+            rows.append([r["arch"], r["shape"], "ERROR", "-", "-", "-", "-",
+                         "-", r.get("error", "")[:40]])
+            continue
+        rf = r["roofline"]
+        mem_gib = r["memory"]["peak_est_B"] / 2**30
+        rows.append([
+            r["arch"], r["shape"], r.get("variant", ""),
+            _fmt_s(rf["compute_s"]), _fmt_s(rf["memory_s"]),
+            _fmt_s(rf["collective_s"]), rf["dominant"],
+            f"{rf['useful_ratio']:.2f}", f"{mem_gib:.1f}GiB",
+        ])
+    return rows
+
+
+HEADERS = ["arch", "shape", "variant", "compute", "memory", "collective",
+           "dominant", "useful", "mem/dev"]
+
+
+def markdown(results: List[Dict[str, Any]]) -> str:
+    lines = ["| " + " | ".join(HEADERS) + " |",
+             "|" + "|".join("---" for _ in HEADERS) + "|"]
+    for row in rows_for(results):
+        lines.append("| " + " | ".join(str(c) for c in row) + " |")
+    return "\n".join(lines)
+
+
+def run(verbose: bool = True):
+    out = {}
+    for name, path in [("single-pod 16x16", SINGLE),
+                       ("multi-pod 2x16x16", MULTI)]:
+        results = load(path)
+        if results is None:
+            print(f"[roofline] {path} not found — run repro.launch.dryrun")
+            continue
+        ok = sum(r["status"] == "ok" for r in results)
+        sk = sum(r["status"] == "skipped" for r in results)
+        er = sum(r["status"] == "error" for r in results)
+        print(f"\n== Roofline — {name} ({ok} ok / {sk} skip / {er} err) ==")
+        print(fmt_table(HEADERS, rows_for(results)))
+        md = markdown(results)
+        md_path = path.replace(".json", ".md")
+        with open(md_path, "w") as f:
+            f.write(f"### Roofline — {name}\n\n{md}\n")
+        out[name] = {"ok": ok, "skipped": sk, "errors": er,
+                     "md_path": md_path}
+        # dominant-term census
+        doms: Dict[str, int] = {}
+        for r in results:
+            if r["status"] == "ok":
+                doms[r["roofline"]["dominant"]] = \
+                    doms.get(r["roofline"]["dominant"], 0) + 1
+        print(f"dominant-term census: {doms}")
+    return out
+
+
+def main() -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Algorithm 1, dissected: kill a stage of a trained model and compare every
+reinitialization strategy's error term and loss damage (paper Fig. 2 / §4.4).
+
+    PYTHONPATH=src python examples/recovery_demo.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, OptimizerConfig
+from repro.core.recovery import recover_stage, recovery_error
+from repro.core.stages import StagePartition
+from repro.data.pipeline import make_batches
+from repro.models.model import build_model
+from repro.optim import adam_update, init_adam
+
+cfg = ModelConfig(
+    name="demo-llama", arch_type="dense", num_layers=8, d_model=64,
+    num_heads=4, num_kv_heads=4, d_ff=160, vocab_size=256, max_seq_len=64,
+    dtype="float32", param_dtype="float32")
+model = build_model(cfg)
+part = StagePartition(cfg, 4)
+batches = make_batches(cfg, batch=8, seq=64, seed=0)
+
+# --- train briefly so the stages hold real signal -------------------------
+params = model.init(jax.random.PRNGKey(0))
+ocfg = OptimizerConfig(lr=2e-3, total_steps=40, warmup_steps=5)
+opt = init_adam(params)
+
+@jax.jit
+def step(p, o, b):
+    (l, _), g = jax.value_and_grad(model.loss, has_aux=True)(p, b)
+    p, o, _ = adam_update(ocfg, p, g, o)
+    return p, o, l, g
+
+for i in range(40):
+    b = {k: jnp.asarray(v) for k, v in next(batches).items()}
+    params, opt, loss, grads = step(params, opt, b)
+print(f"trained 40 steps, loss {float(loss):.4f}")
+
+# --- Alg. 1 ingredients ----------------------------------------------------
+omegas = part.stage_grad_sqnorms(grads)   # ||grad W_s||^2 per stage — "free"
+print("per-stage grad sqnorms (Alg. 1's omegas):",
+      [f"{float(w):.3e}" for w in omegas])
+
+probe = {k: jnp.asarray(v) for k, v in next(batches).items()}
+loss_fn = jax.jit(lambda p: model.loss(p, probe)[0])
+base = float(loss_fn(params))
+
+FAILED = 2
+print(f"\nstage {FAILED} dies. base loss {base:.4f}. reinit options "
+      "(each followed by 20 recovery steps):")
+print(f"{'strategy':12s} {'error term (§4.4)':>18s} {'loss@reinit':>12s} "
+      f"{'loss@+20':>9s}")
+for strat in ["grad_norm", "uniform", "copy_prev", "random"]:
+    p2 = recover_stage(params, part, FAILED, omegas, strategy=strat,
+                       key=jax.random.PRNGKey(1))
+    err = float(recovery_error(params, p2, part, FAILED))
+    post = float(loss_fn(p2))
+    o2 = init_adam(p2)
+    for _ in range(20):
+        b = {k: jnp.asarray(v) for k, v in next(batches).items()}
+        p2, o2, l2, _ = step(p2, o2, b)
+    tag = "  <- Alg. 1 (CheckFree)" if strat == "grad_norm" else ""
+    print(f"{strat:12s} {err:18.4e} {post:12.4f} {float(l2):9.4f}{tag}")
+
+print("\nthe §4.4 bound says convergence past a failure is governed by the "
+      "reinit\nerror term; the weighted average trades a small parameter-"
+      "space error for\nthe best post-recovery loss (paper Fig. 2) — run "
+      "benchmarks/bench_reinit.py\nfor the full training-curve comparison.")

@@ -1,0 +1,2 @@
+from repro.ckpt.checkpoint import (  # noqa: F401
+    save_checkpoint, load_checkpoint, latest_step, Checkpointer)

@@ -1,0 +1,101 @@
+"""Disk checkpointing — the baseline recovery strategy the paper compares
+against (periodic full-model save to "non-faulty storage" + rollback on
+failure).
+
+Arrays are stored in ``.npz`` files keyed by flattened tree index; loading
+requires a template pytree with the same structure (standard JAX practice —
+the model config defines the structure).  A :class:`Checkpointer` implements
+the rollback protocol used by the trainer.
+"""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def _flatten(tree: Pytree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: Pytree) -> str:
+    """Write ``tree`` to ``directory/ckpt_<step>.npz`` (atomic rename)."""
+    os.makedirs(directory, exist_ok=True)
+    leaves, _ = _flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **arrays)
+    os.replace(tmp, path)
+    return path
+
+
+def load_checkpoint(directory: str, template: Pytree,
+                    step: Optional[int] = None) -> Tuple[int, Pytree]:
+    """Load the checkpoint at ``step`` (default: latest) into the structure
+    of ``template``."""
+    if step is None:
+        step = latest_step(directory)
+        assert step is not None, f"no checkpoints in {directory}"
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    leaves, treedef = _flatten(template)
+    loaded = [np.asarray(data[f"leaf_{i}"]) for i in range(len(leaves))]
+    for i, (ref, got) in enumerate(zip(leaves, loaded)):
+        assert np.shape(ref) == got.shape, (i, np.shape(ref), got.shape)
+    return step, jax.tree_util.tree_unflatten(treedef, loaded)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+class Checkpointer:
+    """Periodic checkpoint + rollback protocol (the paper's baseline).
+
+    ``maybe_save`` is called every iteration; ``rollback`` returns the last
+    saved state and the number of lost iterations (the rollback cost that
+    dominates the paper's Fig. 4b comparison).
+    """
+
+    def __init__(self, directory: str, every: int, keep: int = 3):
+        self.dir = directory
+        self.every = max(every, 1)
+        self.keep = keep
+        if os.path.isdir(directory):
+            shutil.rmtree(directory)
+        os.makedirs(directory, exist_ok=True)
+
+    def maybe_save(self, step: int, tree: Pytree) -> bool:
+        if step % self.every != 0:
+            return False
+        save_checkpoint(self.dir, step, tree)
+        self._gc()
+        return True
+
+    def rollback(self, current_step: int, template: Pytree,
+                 ) -> Tuple[int, Pytree, int]:
+        """Returns (ckpt_step, tree, lost_iterations)."""
+        step = latest_step(self.dir)
+        if step is None:  # nothing saved yet -> restart from step 0
+            raise RuntimeError("no checkpoint to roll back to")
+        step, tree = load_checkpoint(self.dir, template, step)
+        return step, tree, current_step - step
+
+    def _gc(self) -> None:
+        steps = sorted(int(re.match(r"ckpt_(\d+)\.npz$", f).group(1))
+                       for f in os.listdir(self.dir)
+                       if re.match(r"ckpt_(\d+)\.npz$", f))
+        for s in steps[:-self.keep]:
+            os.remove(os.path.join(self.dir, f"ckpt_{s:08d}.npz"))

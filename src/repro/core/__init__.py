@@ -1,0 +1,11 @@
+"""CheckFree / CheckFree+ — the paper's primary contribution.
+
+Checkpoint-free recovery of pipeline-stage failures: a failed stage is
+reinitialized as the gradient-norm-weighted average of its neighbours
+(Alg. 1); CheckFree+ adds out-of-order pipelining so the first/last stages
+have trained "twins", plus exact replication of the (de)embedding layers.
+"""
+from repro.core.stages import StagePartition, towers  # noqa: F401
+from repro.core.recovery import recover_stage, recovery_error  # noqa: F401
+from repro.core.failures import FailureSchedule  # noqa: F401
+from repro.core.swap import swap_permutation, stage_permutations  # noqa: F401

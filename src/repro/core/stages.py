@@ -1,0 +1,92 @@
+"""Stage partitioning — maps a model's stacked parameter pytree onto the
+paper's pipeline stages.
+
+Convention (paper §5.1): stage ``S0`` holds the embedding + deembedding (and
+any heterogeneous extras: learned positions, VLM projector, zamba2's shared
+attention block, whisper's encoder-side norms...).  Transformer stages
+``S1..SK`` each hold ``num_layers / K`` consecutive blocks.  Because blocks
+are stacked on axis 0, a stage is a contiguous slice of every leaf of the
+tower subtree — so the CheckFree merge is a pair of slices + an axpy, which
+is exactly what the ``stage_merge`` Pallas kernel implements on TPU.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def towers(cfg: ModelConfig) -> List[Tuple[str, int]]:
+    """The staged residual towers of each family: (param key, num layers)."""
+    if cfg.arch_type in ("dense", "moe", "vlm"):
+        return [("blocks", cfg.num_layers)]
+    if cfg.arch_type in ("ssm", "hybrid"):
+        return [("mamba" if cfg.arch_type == "hybrid" else "blocks",
+                 cfg.num_layers)]
+    if cfg.arch_type == "encdec":
+        return [("enc_blocks", cfg.num_encoder_layers),
+                ("dec_blocks", cfg.num_layers)]
+    raise ValueError(cfg.arch_type)
+
+
+class StagePartition:
+    """Equal-size partition of the primary tower into ``num_stages`` stages.
+
+    For encdec archs the partition applies to the decoder tower (the encoder
+    is partitioned separately with the same mechanics via a second instance).
+    """
+
+    def __init__(self, cfg: ModelConfig, num_stages: int, tower: int = 0):
+        self.cfg = cfg
+        self.tower_key, self.num_layers = towers(cfg)[tower]
+        assert self.num_layers % num_stages == 0, (
+            f"{self.num_layers} layers not divisible into {num_stages} stages")
+        self.num_stages = num_stages
+        self.layers_per_stage = self.num_layers // num_stages
+
+    # ---- slicing -----------------------------------------------------
+    def stage_bounds(self, i: int) -> Tuple[int, int]:
+        assert 0 <= i < self.num_stages
+        lo = i * self.layers_per_stage
+        return lo, lo + self.layers_per_stage
+
+    def get_stage(self, params: Params, i: int) -> Params:
+        lo, hi = self.stage_bounds(i)
+        return jax.tree.map(lambda a: a[lo:hi], params[self.tower_key])
+
+    def set_stage(self, params: Params, i: int, stage: Params) -> Params:
+        lo, _ = self.stage_bounds(i)
+        new_tower = jax.tree.map(
+            lambda a, s: jax.lax.dynamic_update_slice_in_dim(
+                a, s.astype(a.dtype), lo, axis=0),
+            params[self.tower_key], stage)
+        out = dict(params)
+        out[self.tower_key] = new_tower
+        return out
+
+    # ---- per-stage gradient norms (Alg. 1's omega) ---------------------
+    def stage_grad_sqnorms(self, grads: Params) -> jnp.ndarray:
+        """omega_i = ||grad W_{s,i}||^2, a (num_stages,) vector.
+
+        Computed from the stacked tower: per-layer squared norms then a
+        segment-sum into stages.  O(|params|) reads, negligible extra memory —
+        matching the paper's claim that tracking omega is ~free.
+        """
+        per_layer = jnp.zeros((self.num_layers,), jnp.float32)
+        for leaf in jax.tree.leaves(grads[self.tower_key]):
+            sq = jnp.square(leaf.astype(jnp.float32))
+            per_layer = per_layer + jnp.sum(
+                sq.reshape(leaf.shape[0], -1), axis=1)
+        return jnp.sum(per_layer.reshape(self.num_stages,
+                                         self.layers_per_stage), axis=1)
+
+    # ---- replicated (stage-0) leaves ----------------------------------
+    def stage0_keys(self, params: Params) -> List[str]:
+        """Keys that belong to the embedding stage / replication path."""
+        return [k for k in params.keys() if k not in
+                {key for key, _ in towers(self.cfg)}]

@@ -1,0 +1,39 @@
+"""Out-of-order pipeline schedule for CheckFree+ (paper §4.3).
+
+For half the microbatches the stages run in order ``S1,S2,...,SK``; for the
+other half the first two and last two transformer stages are swapped:
+``S2,S1,...,SK,SK-1``.  S2 thereby learns S1's role (and S_{K-1} learns
+S_K's) "for free" — no redundant compute, the swap is just a different
+composition order.
+
+With blocks stacked on axis 0, executing a swapped stage order is a static
+gather of layer indices — XLA compiles the normal and swapped programs once
+each (the TPU adaptation of SkipPipe's reordered execution, see DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+
+def stage_permutations(num_stages: int) -> Tuple[List[int], List[int]]:
+    """(normal, swapped) stage orders, 0-based transformer stages."""
+    normal = list(range(num_stages))
+    if num_stages < 4:
+        return normal, normal  # nothing meaningful to swap
+    swapped = normal.copy()
+    swapped[0], swapped[1] = swapped[1], swapped[0]
+    swapped[-1], swapped[-2] = swapped[-2], swapped[-1]
+    return normal, swapped
+
+
+def swap_permutation(num_layers: int, num_stages: int) -> np.ndarray:
+    """Layer-index permutation realizing the swapped stage order."""
+    assert num_layers % num_stages == 0
+    lps = num_layers // num_stages
+    _, swapped = stage_permutations(num_stages)
+    idx = []
+    for s in swapped:
+        idx.extend(range(s * lps, (s + 1) * lps))
+    return np.asarray(idx, np.int32)

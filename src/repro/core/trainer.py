@@ -1,0 +1,287 @@
+"""Failure-aware trainer: the paper's training loop with pluggable recovery
+strategies.
+
+The trainer executes *wall iterations*; a recovery strategy reacts to failure
+events (same seeded schedule across strategies), mutating the train state
+(CheckFree merge / checkpoint rollback / redundant promote) and charging
+wall-clock per the :class:`WallClockModel`.  CheckFree+'s out-of-order
+microbatches are realized by computing half the batch through a swapped
+stage order (a static layer-index gather — see core/swap.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, OptimizerConfig, RecoveryConfig, TrainConfig
+from repro.core.failures import FailureSchedule
+from repro.core.recovery import (recover_consecutive, recover_stage,
+                                 recovery_error)
+from repro.core.stages import StagePartition
+from repro.core.swap import swap_permutation
+from repro.core.walltime import WallClockModel
+from repro.ckpt.checkpoint import Checkpointer
+from repro.models.model import Model
+from repro.optim.adam import OptState, adam_update, init_adam
+
+Params = Any
+
+
+@dataclass
+class TrainState:
+    params: Params
+    opt_state: OptState
+    lr_scale: float = 1.0
+    omegas: Optional[np.ndarray] = None      # last per-stage ||grad||^2
+    effective_step: int = 0                  # optimization progress
+
+
+@dataclass
+class History:
+    steps: List[int] = field(default_factory=list)
+    wall_time: List[float] = field(default_factory=list)
+    loss: List[float] = field(default_factory=list)
+    eval_loss: List[Tuple[int, float, float]] = field(default_factory=list)
+    failures: List[Tuple[int, int]] = field(default_factory=list)
+    recovery_errors: List[Tuple[int, float]] = field(default_factory=list)
+    wall_iters: int = 0
+
+
+def _permute_tower(params: Params, tower_key: str, idx: jnp.ndarray) -> Params:
+    out = dict(params)
+    out[tower_key] = jax.tree.map(lambda a: jnp.take(a, idx, axis=0),
+                                  params[tower_key])
+    return out
+
+
+def make_train_step(model: Model, opt_cfg: OptimizerConfig,
+                    part: StagePartition, *, use_swap: bool = False,
+                    ) -> Callable:
+    """Build the jitted train step.
+
+    With ``use_swap`` (CheckFree+), the batch is split in half: the first half
+    runs the normal stage order, the second half the swapped order.
+    """
+    tower_key = part.tower_key
+    if use_swap:
+        perm = jnp.asarray(swap_permutation(part.num_layers, part.num_stages))
+
+    def loss_fn(params, batch):
+        if not use_swap:
+            loss, metrics = model.loss(params, batch)
+            return loss, metrics
+        half = batch["tokens"].shape[0] // 2
+        first = {k: v[:half] for k, v in batch.items()}
+        second = {k: v[half:] for k, v in batch.items()}
+        l1, m1 = model.loss(params, first)
+        l2, _ = model.loss(_permute_tower(params, tower_key, perm), second)
+        return 0.5 * (l1 + l2), m1
+
+    @jax.jit
+    def train_step(params, opt_state, batch, lr_scale):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        omegas = part.stage_grad_sqnorms(grads)
+        params, opt_state, opt_metrics = adam_update(
+            opt_cfg, params, grads, opt_state, lr_scale)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params, opt_state, omegas, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model) -> Callable:
+    @jax.jit
+    def eval_step(params, batch):
+        logits, aux = model.apply(params, batch)
+        if model.cfg.arch_type == "vlm":
+            logits = logits[:, batch["patches"].shape[1]:, :]
+        from repro.models.layers import cross_entropy
+        return cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    return eval_step
+
+
+class Trainer:
+    """Drives (model x recovery strategy x failure schedule)."""
+
+    def __init__(self, model: Model, tcfg: TrainConfig,
+                 wall: Optional[WallClockModel] = None,
+                 schedule: Optional[FailureSchedule] = None):
+        self.model = model
+        self.tcfg = tcfg
+        self.rcfg = tcfg.recovery
+        self.strategy = self.rcfg.strategy
+        self.part = StagePartition(model.cfg, self.rcfg.num_stages)
+        self.wall = wall or WallClockModel(
+            iter_time_s=self.rcfg.iteration_time_s)
+        self.schedule = schedule
+        use_swap = self.strategy == "checkfree_plus"
+        self.train_step = make_train_step(model, tcfg.optimizer, self.part,
+                                          use_swap=use_swap)
+        self.eval_step = make_eval_step(model)
+        self.ckpt: Optional[Checkpointer] = None
+        if self.strategy == "checkpoint":
+            self.ckpt = Checkpointer(self.rcfg.checkpoint_dir,
+                                     self.rcfg.checkpoint_every)
+
+    # ---- failure handling -------------------------------------------
+    def _handle_failure(self, stage: int, state: TrainState,
+                        hist: History, wall_step: int,
+                        key: jax.Array) -> TrainState:
+        strat = self.strategy
+        if strat == "none":
+            return state
+        if strat == "redundant":
+            # Bamboo: previous stage promotes its redundant copy — weights
+            # recovered exactly; only wall-clock is charged.
+            return state
+        if strat == "checkpoint":
+            assert self.ckpt is not None
+            tpl = (state.params, state.opt_state)
+            try:
+                step, (params, opt_state), lost = self.ckpt.rollback(
+                    state.effective_step, tpl)
+            except RuntimeError:   # no checkpoint yet -> restart from init
+                return state
+            hist.recovery_errors.append((wall_step, float("nan")))
+            return TrainState(params, opt_state, state.lr_scale,
+                              state.omegas, effective_step=step)
+
+        # CheckFree family: merge neighbours (or ablation variants)
+        reinit = {"checkfree": "grad_norm", "checkfree_plus": "grad_norm",
+                  "uniform": "uniform", "copy": "copy_prev",
+                  "random": "random"}[strat]
+        k = self.part.num_stages
+        if strat == "checkfree" and stage in (0, k - 1):
+            # CheckFree (no '+') cannot recover edge stages — the paper
+            # protects them; if an event still arrives, degrade to copy.
+            reinit = "copy_prev"
+        omegas = jnp.asarray(state.omegas if state.omegas is not None
+                             else np.ones((k,), np.float32))
+        before = state.params
+        params = recover_stage(before, self.part, stage, omegas,
+                               strategy=reinit, key=key)
+        err = float(recovery_error(before, params, self.part, stage))
+        hist.recovery_errors.append((wall_step, err))
+        # the failed node's optimizer moments are gone: zero that stage
+        zeros = jax.tree.map(jnp.zeros_like,
+                             self.part.get_stage(state.opt_state.m, stage))
+        m = self.part.set_stage(state.opt_state.m, stage, zeros)
+        v = self.part.set_stage(state.opt_state.v, stage, zeros)
+        opt_state = OptState(m, v, state.opt_state.step)
+        lr_scale = min(state.lr_scale * self.rcfg.lr_boost,
+                       self.rcfg.lr_boost_cap)  # Alg. 1 line 4 (capped)
+        return TrainState(params, opt_state, lr_scale, state.omegas,
+                          state.effective_step)
+
+    def _handle_consecutive(self, run: List[int], state: TrainState,
+                            hist: History, wall_step: int) -> TrainState:
+        """Beyond-paper: a run of consecutive stages died together."""
+        k = self.part.num_stages
+        omegas = jnp.asarray(state.omegas if state.omegas is not None
+                             else np.ones((k,), np.float32))
+        before = state.params
+        params = recover_consecutive(before, self.part, run, omegas)
+        for stage in run:
+            err = float(recovery_error(before, params, self.part, stage))
+            hist.recovery_errors.append((wall_step, err))
+        opt_state = state.opt_state
+        m, v = opt_state.m, opt_state.v
+        for stage in run:
+            zeros = jax.tree.map(jnp.zeros_like,
+                                 self.part.get_stage(m, stage))
+            m = self.part.set_stage(m, stage, zeros)
+            v = self.part.set_stage(v, stage, zeros)
+        lr_scale = min(state.lr_scale * self.rcfg.lr_boost,
+                       self.rcfg.lr_boost_cap)
+        return TrainState(params, OptState(m, v, opt_state.step), lr_scale,
+                          state.omegas, state.effective_step)
+
+    # ---- main loop ----------------------------------------------------
+    def run(self, batches, eval_batches: Optional[List] = None,
+            verbose: bool = False) -> Tuple[TrainState, History]:
+        tcfg = self.tcfg
+        key = jax.random.PRNGKey(tcfg.seed)
+        params = self.model.init(key)
+        state = TrainState(params, init_adam(params))
+        hist = History()
+        clock = 0.0
+        data_cache: Dict[int, Any] = {}
+
+        def batch_at(step: int):
+            # rollback replays the same data (deterministic stream)
+            while step not in data_cache:
+                data_cache[len(data_cache)] = next(batches)
+            return data_cache[step]
+
+        wall_step = 0
+        max_wall = tcfg.steps * 10  # safety bound for rollback-heavy runs
+        while state.effective_step < tcfg.steps and wall_step < max_wall:
+            # 1) failures arrive at iteration boundaries; consecutive-stage
+            #    runs (beyond-paper, §6 future work) are recovered together
+            if self.schedule is not None:
+                stages = sorted(self.schedule.at(wall_step))
+                runs: List[List[int]] = []
+                for stage in stages:
+                    if runs and stage == runs[-1][-1] + 1:
+                        runs[-1].append(stage)
+                    else:
+                        runs.append([stage])
+                for run in runs:
+                    key, sub = jax.random.split(key)
+                    if len(run) > 1 and self.strategy in (
+                            "checkfree", "checkfree_plus"):
+                        state = self._handle_consecutive(run, state, hist,
+                                                         wall_step)
+                    else:
+                        for stage in run:
+                            state = self._handle_failure(stage, state, hist,
+                                                         wall_step, sub)
+                    for stage in run:
+                        hist.failures.append((wall_step, stage))
+                        clock += self.wall.failure_cost(self.strategy)
+
+            # 2) one training iteration
+            batch = batch_at(state.effective_step)
+            jb = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt_state, omegas, metrics = self.train_step(
+                state.params, state.opt_state, jb, state.lr_scale)
+            decay = self.rcfg.lr_boost_decay
+            new_scale = 1.0 + (state.lr_scale - 1.0) * decay
+            state = TrainState(params, opt_state, new_scale,
+                               np.asarray(omegas),
+                               state.effective_step + 1)
+            clock += self.wall.iteration_cost(self.strategy,
+                                              self.rcfg.checkpoint_every)
+
+            # 3) strategy bookkeeping
+            if self.ckpt is not None:
+                self.ckpt.maybe_save(state.effective_step,
+                                     (state.params, state.opt_state))
+
+            hist.steps.append(state.effective_step)
+            hist.wall_time.append(clock)
+            hist.loss.append(float(metrics["loss"]))
+            if eval_batches and state.effective_step % tcfg.eval_every == 0:
+                el = float(np.mean([
+                    float(self.eval_step(state.params,
+                                         {k: jnp.asarray(v)
+                                          for k, v in eb.items()}))
+                    for eb in eval_batches]))
+                hist.eval_loss.append((state.effective_step, clock, el))
+                if verbose:
+                    print(f"  step {state.effective_step:4d} "
+                          f"wall {clock/3600:7.2f}h loss "
+                          f"{metrics['loss']:.3f} eval {el:.3f}")
+            wall_step += 1
+
+        hist.wall_iters = wall_step
+        return state, hist

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (  # noqa: F401
+    SyntheticLM, ByteCorpus, make_batches, batch_for)

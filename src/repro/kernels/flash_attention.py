@@ -1,0 +1,100 @@
+"""Flash attention (block-tiled online-softmax) Pallas kernel.
+
+TPU-native tiling: the query tile (blk_q, D) and one K/V tile (blk_k, D) are
+resident in VMEM; the kernel walks K/V tiles with dynamic loop bounds so a
+causal / sliding-window query block only touches the tiles inside its
+horizon (this is where the sub-quadratic ``long_500k`` support comes from).
+GQA is folded into the BlockSpec index map (q head -> kv head = h // group).
+
+Layout: q (B, Hq, S, D); k/v (B, Hkv, S, D); output (B, Hq, S, D).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, blk_k: int, causal: bool,
+                  window: int, scale: float, seq_len: int):
+    iq = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (blk_q, D)
+    k = k_ref[0, 0]                                      # (S, D)
+    v = v_ref[0, 0]
+    blk_q, d = q.shape
+    q_pos = iq * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, 1), 0)
+
+    nkb = seq_len // blk_k
+    if causal:
+        # last K tile that any query in this block can see
+        hi = jnp.minimum(((iq + 1) * blk_q + blk_k - 1) // blk_k, nkb)
+    else:
+        hi = nkb
+    if window > 0:
+        lo = jnp.maximum((iq * blk_q - window + 1) // blk_k, 0)
+    else:
+        lo = 0
+
+    def body(j, carry):
+        m, l, acc = carry
+        kj = jax.lax.dynamic_slice(k, (j * blk_k, 0), (blk_k, d)
+                                   ).astype(jnp.float32)
+        vj = jax.lax.dynamic_slice(v, (j * blk_k, 0), (blk_k, d)
+                                   ).astype(jnp.float32)
+        s = q @ kj.T                                     # (blk_q, blk_k)
+        k_pos = j * blk_k + jax.lax.broadcasted_iota(jnp.int32, (1, blk_k), 1)
+        mask = jnp.ones_like(s, dtype=bool)
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        if window > 0:
+            mask = mask & (k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ vj
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((blk_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((blk_q,), jnp.float32)
+    acc0 = jnp.zeros((blk_q, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(lo, hi, body, (m0, l0, acc0))
+    o_ref[0, 0] = (acc / (l[:, None] + 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "blk_q",
+                                             "blk_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0, blk_q: int = 128,
+                    blk_k: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """q: (B, Hq, S, D); k/v: (B, Hkv, S, D) with Hq % Hkv == 0."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    blk_q = min(blk_q, s)
+    blk_k = min(blk_k, s)
+    assert s % blk_q == 0 and s % blk_k == 0, (s, blk_q, blk_k)
+    scale = 1.0 / math.sqrt(d)
+    grid = (b, hq, s // blk_q)
+    kernel = functools.partial(_flash_kernel, blk_k=blk_k, causal=causal,
+                               window=window, scale=scale, seq_len=s)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi, qi: (bi, hi // g, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi, qi: (bi, hi // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_q, d),
+                               lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, s, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

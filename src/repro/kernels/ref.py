@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every kernel (the ground truth in kernel tests)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def stage_merge_ref(x: jnp.ndarray, y: jnp.ndarray, ca, cb) -> jnp.ndarray:
+    out = (jnp.asarray(ca, jnp.float32) * x.astype(jnp.float32) +
+           jnp.asarray(cb, jnp.float32) * y.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """q: (B, Hq, S, D); k/v: (B, Hkv, S, D)."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window > 0:
+        mask = mask & (kpos > qpos - window)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_scan_ref(x: jnp.ndarray, a: jnp.ndarray, bmat: jnp.ndarray,
+                 cmat: jnp.ndarray) -> jnp.ndarray:
+    """Sequential token-by-token recurrence (the definitional semantics).
+
+    x: (B, H, T, P); a: (B, H, T); bmat/cmat: (B, G, T, N).
+    """
+    b, h, t, p = x.shape
+    g, n = bmat.shape[1], bmat.shape[3]
+    r = h // g
+    bh = jnp.repeat(bmat, r, axis=1)                 # (B, H, T, N)
+    ch = jnp.repeat(cmat, r, axis=1)
+
+    def step(state, inp):
+        xt, at, bt, ct = inp                         # (B,H,P) (B,H) (B,H,N)
+        state = state * jnp.exp(at.astype(jnp.float32))[..., None, None] + \
+            xt.astype(jnp.float32)[..., :, None] * \
+            bt.astype(jnp.float32)[..., None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct.astype(jnp.float32))
+        return state, y
+
+    xs = (jnp.moveaxis(x, 2, 0), jnp.moveaxis(a, 2, 0),
+          jnp.moveaxis(bh, 2, 0), jnp.moveaxis(ch, 2, 0))
+    state0 = jnp.zeros((b, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(x.dtype)    # (B, H, T, P)

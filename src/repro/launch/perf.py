@@ -1,0 +1,68 @@
+"""Perf levers for the roofline hillclimb (EXPERIMENTS.md §Perf).
+
+Global, trace-time hooks that the model families consult so the dry-run can
+toggle optimizations without touching model code per-iteration:
+
+* ``activation_spec`` — a PartitionSpec applied (via
+  ``with_sharding_constraint``) to the layer-boundary activations
+  (B, S, d).  The baseline leaves XLA's propagation alone, which replicates
+  the (B/data, S, d) activation over the 'model' axis — so the remat-saved
+  per-layer activations pay num_layers x S x d x 2B per device.  Setting
+  ``P(("data",), None, "model")`` (feature-sharded boundaries) or
+  ``P(("data",), "model", None)`` (sequence-sharded boundaries) divides that
+  by the model-axis size.
+
+Used via environment at trace time (the dry-run sets these before lowering):
+
+    REPRO_ACT_SHARD = "" | "feature" | "seq"
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def activation_spec() -> Optional[P]:
+    mode = os.environ.get("REPRO_ACT_SHARD", "")
+    if not mode:
+        return None
+    if mode == "feature":
+        return P(None, None, "model")
+    if mode == "seq":
+        return P(None, "model", None)
+    raise ValueError(f"REPRO_ACT_SHARD={mode!r}")
+
+
+def remat_policy():
+    """Perf lever: activation-checkpoint policy for the layer scan.
+
+    baseline ('nothing') recomputes the whole block in the backward —
+    cheapest memory, but every tensor-parallel psum in the block runs
+    twice.  'dots' saves matmul outputs (jax.checkpoint_policies
+    dots_saveable): more resident bytes, no recomputed psums.
+    """
+    mode = os.environ.get("REPRO_REMAT", "nothing")
+    import jax as _jax
+    if mode == "dots":
+        return _jax.checkpoint_policies.dots_saveable
+    if mode == "nothing":
+        return _jax.checkpoint_policies.nothing_saveable
+    raise ValueError(f"REPRO_REMAT={mode!r}")
+
+
+def constrain_activations(x: jax.Array) -> jax.Array:
+    """Apply the configured boundary constraint to a (B, S, d) activation.
+
+    No-op unless REPRO_ACT_SHARD is set AND we are tracing under a mesh
+    context (plain CPU tests/benches never enter one).
+    """
+    spec = activation_spec()
+    if spec is None or x.ndim != 3:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:   # no mesh context — leave untouched
+        return x

@@ -1,0 +1,160 @@
+"""Rule-based GSPMD sharding specs with divisibility fallbacks.
+
+Baseline scheme (every arch x shape must lower + compile):
+
+* batch-bearing inputs: dim 0 over ``("pod","data")`` (falls back to
+  replicated when the global batch doesn't divide, e.g. long_500k's B=1);
+* parameters: the largest non-scan dim divisible by the "model" axis size is
+  sharded over "model" (tensor/FSDP hybrid on one axis); expert dims take
+  priority for MoE (expert parallelism when divisible);
+* KV caches: batch over "data", sequence over "model" when divisible
+  (flash-decoding-style sharded attention over the cache), else best-effort.
+
+Hillclimbing refines these for the three chosen pairs (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def data_size(mesh: Mesh) -> int:
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n
+
+
+def model_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def param_spec(shape: Tuple[int, ...], mesh: Mesh, *,
+               path_str: str = "") -> P:
+    """Largest divisible non-leading dim -> 'model'; rest replicated.
+
+    The leading dim of stacked towers (blocks/mamba/enc_blocks/dec_blocks) is
+    the scan axis — never sharded.  MoE expert dims ('w_gate','w_up','w_down'
+    under a 'mlp' with 3D+ leaves) prefer the expert axis (expert parallel).
+    """
+    n = model_size(mesh)
+    nd = len(shape)
+    if nd == 0:
+        return P()
+    start = 1 if nd >= 3 else 0   # skip scan/stack axis for >=3D leaves
+    cands = list(range(start, nd))
+    # expert-parallel preference: (L, E, d, ff) leaves in moe mlp
+    if ("w_gate" in path_str or "w_up" in path_str or "w_down" in path_str) \
+            and nd == 4:
+        cands = [1, 3, 2]
+    # pick the largest divisible candidate dim
+    best = None
+    for i in sorted(cands, key=lambda i: -shape[i]):
+        if shape[i] % n == 0 and shape[i] >= n:
+            best = i
+            break
+    if ("w_gate" in path_str or "w_up" in path_str or "w_down" in path_str) \
+            and nd == 4 and shape[1] % n == 0:
+        best = 1
+    spec = [None] * nd
+    if best is not None:
+        spec[best] = "model"
+    # perf lever: FSDP/ZeRO-3 — also shard over 'data' when divisible
+    import os
+    if os.environ.get("REPRO_PARAM_SHARD", "baseline") == "fsdp" \
+            and best is not None:
+        d = mesh.shape["data"]
+        total = n * d
+        if shape[best] % total == 0 and shape[best] >= total:
+            spec[best] = ("data", "model")
+        else:
+            # second-largest divisible dim takes 'data'
+            for i in sorted((j for j in range(1 if nd >= 3 else 0, nd)
+                             if j != best), key=lambda j: -shape[j]):
+                if shape[i] % d == 0 and shape[i] >= d:
+                    spec[i] = "data"
+                    break
+    return P(*spec)
+
+
+def param_shardings(params_shape: Pytree, mesh: Mesh) -> Pytree:
+    def one(path, leaf):
+        ps = jax.tree_util.keystr(path)
+        return NamedSharding(mesh, param_spec(leaf.shape, mesh, path_str=ps))
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+
+def batch_spec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    d = data_size(mesh)
+    if len(shape) >= 1 and shape[0] % d == 0 and shape[0] >= d:
+        return P(data_axes(mesh), *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def batch_shardings(batch_shape: Pytree, mesh: Mesh) -> Pytree:
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, batch_spec(leaf.shape, mesh)),
+        batch_shape)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def cache_spec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """KV cache (L,B,S,kv,hd) / ssm state (L,B,H,P,N) / conv (L,B,K,C) / pos.
+
+    batch over 'data' when divisible; then the largest remaining dim
+    divisible by 'model' (sequence preferred for KV caches -> sharded-cache
+    decode attention).
+    """
+    d, m = data_size(mesh), model_size(mesh)
+    nd = len(shape)
+    spec: list = [None] * nd
+    if nd == 1:      # pos
+        return P(None)
+    # batch dim is axis 1 for stacked caches, axis 0 otherwise
+    baxis = 1 if nd >= 3 else 0
+    if shape[baxis] % d == 0 and shape[baxis] >= d:
+        spec[baxis] = data_axes(mesh)
+    # model axis: prefer the longest dim after batch
+    cands = [i for i in range(nd) if i != baxis and i != 0]
+    for i in sorted(cands, key=lambda i: -shape[i]):
+        if shape[i] % m == 0 and shape[i] >= m:
+            spec[i] = "model"
+            break
+    return P(*spec)
+
+
+def cache_shardings(cache_shape: Pytree, mesh: Mesh) -> Pytree:
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, cache_spec(leaf.shape, mesh)),
+        cache_shape)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def with_shardings(shapes: Pytree, shardings: Pytree) -> Pytree:
+    """Attach shardings to a ShapeDtypeStruct pytree."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)

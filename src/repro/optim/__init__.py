@@ -1,0 +1,3 @@
+from repro.optim.adam import (  # noqa: F401
+    init_adam, adam_update, global_norm, clip_by_global_norm, lr_schedule,
+    OptState)

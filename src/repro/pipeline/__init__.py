@@ -1,0 +1,4 @@
+from repro.pipeline.spmd import (checkfree_recover_spmd, pipeline_loss,
+                                 stage_index)
+
+__all__ = ["pipeline_loss", "checkfree_recover_spmd", "stage_index"]

@@ -1,0 +1,166 @@
+"""Paper-faithful pipeline parallelism as shard_map + lax.ppermute.
+
+This is the TPU-native translation of the paper's setting (DESIGN.md §3):
+the mesh's ``"stage"`` axis *is* the pipeline; each device holds a
+contiguous slice of the stacked block tower (axis 0 sharded over "stage"),
+microbatch activations rotate stage-to-stage with ``lax.ppermute`` in a
+GPipe schedule, and the backward pass reverses the permutes automatically
+(ppermute is differentiable) — no NCCL emulation anywhere.
+
+CheckFree's recovery is likewise a collective: the failed stage's two
+neighbours ``ppermute`` their weight slices one hop, and the receiving
+device applies the Alg. 1 weighted merge locally.  Only the neighbours
+transmit (2 x |stage| bytes over one ICI hop each), matching the paper's
+"new node receives W_{i-1}, W_{i+1}" protocol.
+
+Scope: dense/MoE decoder-only towers with homogeneous blocks (the paper's
+LLaMa configs).  The embedding/head (paper's S0) are replicated — exactly
+the CheckFree+ replication path for (de)embeddings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+Params = Dict[str, Any]
+
+
+def stage_index(axis: str = "stage") -> jnp.ndarray:
+    return jax.lax.axis_index(axis)
+
+
+def param_pipeline_specs(params: Params, num_stages: int) -> Params:
+    """PartitionSpecs: block tower sharded over 'stage' on axis 0, rest
+    replicated (the S0 replication path)."""
+    def spec(path, leaf):
+        top = path[0].key if hasattr(path[0], "key") else str(path[0])
+        if top == "blocks":
+            return P("stage")
+        return P()
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def _apply_local_blocks(cfg: ModelConfig, blocks_local: Params,
+                        x: jnp.ndarray, positions: jnp.ndarray,
+                        ) -> jnp.ndarray:
+    """Run this device's slice of the tower over one microbatch."""
+    s = x.shape[1]
+    full_mask = L.causal_mask(s, s)
+    block = T._block_apply(cfg)
+
+    def step(carry, bp):
+        out, _aux = block(carry, bp, full_mask, full_mask,
+                          jnp.zeros((), bool), positions)
+        return out, None
+
+    x, _ = jax.lax.scan(step, x, blocks_local)
+    return x
+
+
+def pipeline_loss(cfg: ModelConfig, mesh: Mesh, num_stages: int,
+                  num_microbatches: int):
+    """Build a jitted pipeline-parallel loss fn over the 'stage' mesh axis.
+
+    Returns ``loss_fn(params, tokens, labels) -> scalar`` where tokens/labels
+    are (B, S) with B divisible by ``num_microbatches``.  The schedule is
+    GPipe: M + K - 1 pipeline ticks, activations hop stages via ppermute.
+    """
+    assert cfg.arch_type in ("dense", "moe"), cfg.arch_type
+    assert cfg.sliding_window == 0, "pipeline path: full attention only"
+    K, M = num_stages, num_microbatches
+    fwd_perm = [(i, i + 1) for i in range(K - 1)]
+
+    def per_device(params, tokens, labels):
+        # params["blocks"]: local (lps, ...) slice; rest replicated
+        my = jax.lax.axis_index("stage")
+        b, s = tokens.shape
+        mb = b // M
+        toks = tokens.reshape(M, mb, s)
+        labs = labels.reshape(M, mb, s)
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (mb, s))
+        dt = jnp.dtype(cfg.dtype)
+        cparams = L.cast_tree(params, cfg.dtype)
+
+        h_recv = jnp.zeros((mb, s, cfg.d_model), dt)
+        loss_acc = jnp.zeros((), jnp.float32)
+        for t in range(M + K - 1):
+            # stage 0 injects microbatch t (while t < M); others take
+            # the activation received from the previous stage
+            inject = T.embed_tokens(cparams, cfg, toks[min(t, M - 1)],
+                                    positions)
+            h_in = jnp.where(my == 0, inject, h_recv)
+            h_out = _apply_local_blocks(cfg, cparams["blocks"], h_in,
+                                        positions)
+            # the last stage finishes microbatch t-(K-1) at tick t
+            if t >= K - 1:
+                logits = T.logits_from_hidden(cparams, cfg, h_out)
+                ce = L.cross_entropy(logits, labs[t - (K - 1)])
+                loss_acc = loss_acc + jnp.where(my == K - 1, ce, 0.0)
+            if t < M + K - 2:
+                h_recv = jax.lax.ppermute(h_out, "stage", fwd_perm)
+        # every stage ends with the global mean loss (for grads + logging)
+        return jax.lax.psum(loss_acc, "stage") / M
+
+    @functools.partial(jax.jit)
+    def loss_fn(params, tokens, labels):
+        specs = param_pipeline_specs(params, K)
+        f = jax.shard_map(
+            per_device, mesh=mesh,
+            in_specs=(specs, P(), P()), out_specs=P())
+        return f(params, tokens, labels)
+
+    return loss_fn
+
+
+def checkfree_recover_spmd(mesh: Mesh, num_stages: int):
+    """Build the collective Alg. 1 recovery: the failed stage's device
+    receives its neighbours' weight slices over one ICI hop each and applies
+    the gradient-norm-weighted merge in place.
+
+    Returns ``recover(blocks, omegas, failed) -> blocks`` operating on the
+    'stage'-sharded tower.  ``failed`` is static (a recovery event compiles
+    its own tiny program — it runs once per failure, paper: ~30 s budget).
+    """
+
+    def make(failed: int):
+        assert 0 < failed < num_stages - 1, "edge stages use CheckFree+ copy"
+        from_prev = [(failed - 1, failed)]
+        from_next = [(failed + 1, failed)]
+
+        def per_device(blocks, omegas):
+            my = jax.lax.axis_index("stage")
+            w_prev = jax.tree.map(
+                lambda w: jax.lax.ppermute(w, "stage", from_prev), blocks)
+            w_next = jax.tree.map(
+                lambda w: jax.lax.ppermute(w, "stage", from_next), blocks)
+            wa = omegas[failed - 1]
+            wb = omegas[failed + 1]
+            denom = wa + wb + 1e-30
+
+            def merge(old, a, b):
+                m = (wa * a.astype(jnp.float32) +
+                     wb * b.astype(jnp.float32)) / denom
+                return jnp.where(my == failed, m.astype(old.dtype), old)
+
+            return jax.tree.map(merge, blocks, w_prev, w_next)
+
+        return jax.jit(jax.shard_map(
+            per_device, mesh=mesh,
+            in_specs=(P("stage"), P()), out_specs=P("stage")))
+
+    cache: Dict[int, Any] = {}
+
+    def recover(blocks: Params, omegas: jnp.ndarray, failed: int) -> Params:
+        if failed not in cache:
+            cache[failed] = make(failed)
+        return cache[failed](blocks, omegas)
+
+    return recover

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# ensure src/ is importable when pytest is run without PYTHONPATH
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: do NOT set XLA_FLAGS / host device count here — smoke tests and
+# benches must see 1 CPU device; only launch/dryrun.py forces 512.

@@ -1,0 +1,107 @@
+"""Beyond-paper extension: consecutive-stage failure recovery (the paper's
+§6 future work) — distance-weighted interpolation between surviving flanks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig
+from repro.core.recovery import recover_consecutive, recover_stage
+from repro.core.stages import StagePartition
+from repro.models.model import build_model
+
+CFG = ModelConfig(
+    name="consec-llama", arch_type="dense", num_layers=12, d_model=32,
+    num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64, max_seq_len=32,
+    dtype="float32", param_dtype="float32")
+K = 6
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = build_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params, StagePartition(CFG, K)
+
+
+def test_single_run_reduces_to_alg1(setup):
+    _, params, part = setup
+    omegas = jnp.array([1.0, 4.0, 0.0, 2.0, 1.0, 1.0])
+    a = recover_consecutive(params, part, [2], omegas)
+    b = recover_stage(params, part, 2, omegas, strategy="grad_norm")
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+
+def test_pair_interpolates_with_distance(setup):
+    """Stages 2,3 die; survivors are 1 and 4.  Stage 2 must lean toward
+    W_1, stage 3 toward W_4 (distance weighting), exactly per formula."""
+    _, params, part = setup
+    omegas = jnp.ones((K,))
+    out = recover_consecutive(params, part, [2, 3], omegas)
+    w1 = jax.tree.leaves(part.get_stage(params, 1))
+    w4 = jax.tree.leaves(part.get_stage(params, 4))
+    got2 = jax.tree.leaves(part.get_stage(out, 2))
+    got3 = jax.tree.leaves(part.get_stage(out, 3))
+    for a, b, g2, g3 in zip(w1, w4, got2, got3):
+        np.testing.assert_allclose(np.asarray(g2),
+                                   (2 * np.asarray(a) + np.asarray(b)) / 3,
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(g3),
+                                   (np.asarray(a) + 2 * np.asarray(b)) / 3,
+                                   atol=1e-6)
+
+
+def test_grad_norm_weighting_composes(setup):
+    _, params, part = setup
+    omegas = jnp.array([1.0, 6.0, 0.0, 0.0, 3.0, 1.0])
+    out = recover_consecutive(params, part, [2, 3], omegas)
+    w1 = jax.tree.leaves(part.get_stage(params, 1))
+    w4 = jax.tree.leaves(part.get_stage(params, 4))
+    # stage 2: a = 6*(4-2)=12, b = 3*(2-1)=3 -> (12 W1 + 3 W4)/15
+    got2 = jax.tree.leaves(part.get_stage(out, 2))
+    for a, b, g in zip(w1, w4, got2):
+        np.testing.assert_allclose(
+            np.asarray(g), (12 * np.asarray(a) + 3 * np.asarray(b)) / 15,
+            atol=1e-6)
+
+
+def test_edge_touching_run_copies_survivor(setup):
+    _, params, part = setup
+    out = recover_consecutive(params, part, [0, 1], jnp.ones((K,)))
+    src = jax.tree.leaves(part.get_stage(params, 2))
+    for k in (0, 1):
+        got = jax.tree.leaves(part.get_stage(out, k))
+        assert all(bool((x == y).all()) for x, y in zip(got, src))
+
+
+def test_recovered_model_finite(setup):
+    model, params, part = setup
+    out = recover_consecutive(params, part, [2, 3], jnp.ones((K,)))
+    logits, _ = model.apply(out, {"tokens": jnp.zeros((2, 16), jnp.int32)})
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_trainer_consecutive_event():
+    """Trainer groups a consecutive-stage event and recovers both stages."""
+    from repro.config import OptimizerConfig, RecoveryConfig, TrainConfig
+    from repro.core.trainer import Trainer
+    from repro.data.pipeline import make_batches
+
+    class Sched:
+        def at(self, step):
+            return [1, 2] if step == 3 else []
+
+    cfg = CFG.replace(num_layers=8)
+    rcfg = RecoveryConfig(strategy="checkfree", num_stages=4)
+    tcfg = TrainConfig(global_batch=4, microbatch=4, seq_len=32, steps=6,
+                       eval_every=100,
+                       optimizer=OptimizerConfig(lr=1e-3, total_steps=6,
+                                                 warmup_steps=1),
+                       recovery=rcfg)
+    tr = Trainer(build_model(cfg), tcfg, schedule=Sched())
+    state, hist = tr.run(make_batches(cfg, batch=4, seq=32, seed=0))
+    assert state.effective_step == 6
+    assert len(hist.failures) == 2
+    assert len(hist.recovery_errors) == 2
+    assert all(np.isfinite(hist.loss))

@@ -1,0 +1,175 @@
+"""Unit tests: optimizer + LR schedule, checkpoint module, config registry."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import (Checkpointer, latest_step,
+                                   load_checkpoint, save_checkpoint)
+from repro.config import OptimizerConfig
+from repro.configs import ARCHS, arch_ids, get_config, get_stages, reduced
+from repro.data.pipeline import ByteCorpus
+from repro.optim.adam import (OptState, adam_update, clip_by_global_norm,
+                              global_norm, init_adam, lr_schedule)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adam_matches_reference_scalar():
+    """One Adam step on a scalar against the closed form."""
+    cfg = OptimizerConfig(lr=0.1, warmup_steps=0, schedule="constant",
+                          grad_clip=0.0, total_steps=10)
+    p = {"w": jnp.asarray(1.0)}
+    g = {"w": jnp.asarray(0.5)}
+    st = init_adam(p)
+    p2, st2, _ = adam_update(cfg, p, g, st)
+    b1, b2 = cfg.betas
+    m = (1 - b1) * 0.5 / (1 - b1)
+    v = (1 - b2) * 0.25 / (1 - b2)
+    want = 1.0 - 0.1 * m / (np.sqrt(v) + cfg.eps)
+    np.testing.assert_allclose(float(p2["w"]), want, rtol=1e-6)
+    assert int(st2.step) == 1
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 3.0)}   # norm 6
+    clipped, gn = clip_by_global_norm(g, 1.5)
+    np.testing.assert_allclose(float(gn), 6.0, rtol=1e-6)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.5, rtol=1e-5)
+
+
+def test_lr_schedule_shapes():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          schedule="cosine", min_lr_ratio=0.1)
+    lrs = [float(lr_schedule(cfg, jnp.asarray(s))) for s in
+           [0, 5, 10, 50, 100]]
+    assert lrs[0] == 0.0
+    np.testing.assert_allclose(lrs[1], 0.5, rtol=1e-6)   # mid-warmup
+    np.testing.assert_allclose(lrs[2], 1.0, rtol=1e-6)   # warmup done
+    assert lrs[2] > lrs[3] > lrs[4]                      # decaying
+    np.testing.assert_allclose(lrs[4], 0.1, rtol=1e-5)   # floor
+
+
+def test_lr_scale_carries_boost():
+    cfg = OptimizerConfig(lr=0.1, warmup_steps=0, schedule="constant",
+                          grad_clip=0.0, total_steps=10)
+    p = {"w": jnp.asarray(1.0)}
+    g = {"w": jnp.asarray(0.5)}
+    st = init_adam(p)
+    p_a, _, ma = adam_update(cfg, p, g, st, lr_scale=1.0)
+    p_b, _, mb = adam_update(cfg, p, g, st, lr_scale=1.1)
+    np.testing.assert_allclose(float(mb["lr"]) / float(ma["lr"]), 1.1,
+                               rtol=1e-6)
+    assert abs(float(p_b["w"]) - 1.0) > abs(float(p_a["w"]) - 1.0)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing (the baseline the paper compares against)
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.int32)}}
+    save_checkpoint(str(tmp_path), 7, tree)
+    assert latest_step(str(tmp_path)) == 7
+    step, loaded = load_checkpoint(str(tmp_path), tree)
+    assert step == 7
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpointer_rollback_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), every=2, keep=2)
+    tree = {"w": jnp.zeros((3,))}
+    for step in range(1, 9):
+        ck.maybe_save(step, jax.tree.map(lambda x: x + step, tree))
+    # keep=2 -> only steps 6 and 8 remain
+    assert latest_step(str(tmp_path)) == 8
+    step, loaded, lost = ck.rollback(11, tree)
+    assert step == 8 and lost == 3
+    np.testing.assert_allclose(np.asarray(loaded["w"]), 8.0)
+
+
+def test_checkpointer_no_checkpoint_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path), every=5)
+    with pytest.raises(RuntimeError):
+        ck.rollback(3, {"w": jnp.zeros(())})
+
+
+# ---------------------------------------------------------------------------
+# config registry (assignment f)
+# ---------------------------------------------------------------------------
+
+def test_all_assigned_archs_registered():
+    assert sorted(arch_ids()) == sorted([
+        "granite-moe-3b-a800m", "deepseek-moe-16b", "h2o-danube-3-4b",
+        "gemma-2b", "zamba2-2.7b", "qwen3-4b", "internvl2-76b",
+        "whisper-large-v3", "mamba2-1.3b", "deepseek-coder-33b"])
+    for a in arch_ids():
+        cfg = get_config(a)
+        cfg.validate()
+        assert cfg.source, a                      # citation present
+        assert get_stages(a) >= 2
+        assert cfg.num_layers % get_stages(a) == 0, a
+
+
+EXPECTED = {  # assignment table: (layers, d_model, heads, kv, vocab)
+    "granite-moe-3b-a800m": (32, 1536, 24, 8, 49155),
+    "deepseek-moe-16b": (28, 2048, 16, 16, 102400),
+    "h2o-danube-3-4b": (24, 3840, 32, 8, 32000),
+    "gemma-2b": (18, 2048, 8, 1, 256000),
+    "zamba2-2.7b": (54, 2560, 32, 32, 32000),
+    "qwen3-4b": (36, 2560, 32, 8, 151936),
+    "internvl2-76b": (80, 8192, 64, 8, 128256),
+    "whisper-large-v3": (32, 1280, 20, 20, 51866),
+    "mamba2-1.3b": (48, 2048, 0, 0, 50280),
+    "deepseek-coder-33b": (62, 7168, 56, 8, 32256),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_assigned_config_values(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, v = EXPECTED[arch]
+    assert cfg.num_layers == L and cfg.d_model == d
+    assert cfg.vocab_size == v
+    if cfg.arch_type != "ssm":
+        assert cfg.num_heads == h and cfg.num_kv_heads == kv
+
+
+def test_param_count_matches_actual():
+    """Analytic param_count must match the real init within 2% (it feeds
+    MODEL_FLOPS in the roofline)."""
+    from repro.models.model import build_model
+    for a in ["gemma-2b", "granite-moe-3b-a800m", "mamba2-1.3b"]:
+        cfg = reduced(get_config(a))
+        model = build_model(cfg)
+        shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        actual = sum(np.prod(s.shape) for s in jax.tree.leaves(shapes))
+        est = cfg.param_count()
+        assert abs(est - actual) / actual < 0.02, (a, est, actual)
+
+
+def test_reduced_invariants():
+    for a in arch_ids():
+        cfg = reduced(get_config(a))
+        assert cfg.num_layers <= 2 and cfg.d_model <= 512
+        if cfg.arch_type == "moe":
+            assert cfg.moe.num_experts <= 4
+
+
+# ---------------------------------------------------------------------------
+# byte corpus
+# ---------------------------------------------------------------------------
+
+def test_byte_corpus(tmp_path):
+    p = tmp_path / "corpus.txt"
+    p.write_text("hello world, this is a tiny corpus for byte-level tests")
+    src = ByteCorpus(str(p))
+    out = src.sample(np.random.default_rng(0), 3, 16)
+    assert out.shape == (3, 17)
+    assert out.min() >= 0 and out.max() < 256

@@ -1,0 +1,18 @@
+"""Wrapper: runs the SPMD pipeline check in a subprocess with 4 host
+devices (the main test process must keep seeing exactly 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_pipeline_spmd_subprocess():
+    script = os.path.join(os.path.dirname(__file__), "pipeline_spmd_check.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "OK" in out.stdout
