@@ -96,7 +96,7 @@ def run_strategy(*, strategy: str, rate: float = 0.10,
     """
     kw = dict(strategy=strategy, rate=rate, steps=steps, seed=seed,
               ckpt_every=ckpt_every, failure_seed=failure_seed, lr=lr,
-              model=BENCH_MODEL.name, stages=BENCH_STAGES, v=4)
+              model=BENCH_MODEL.name, stages=BENCH_STAGES, v=5)
     os.makedirs(CACHE_DIR, exist_ok=True)
     path = os.path.join(CACHE_DIR, _cache_key(kw) + ".json")
     if use_cache and os.path.exists(path):
@@ -104,13 +104,17 @@ def run_strategy(*, strategy: str, rate: float = 0.10,
             return json.load(f)
 
     wall = WallClockModel(model_bytes=4 * BENCH_MODEL.param_count() * 2)
+    # paper protocol: edge stages are protected for every policy without
+    # swap-trained twins (only CheckFree+'s swap schedule makes them losable)
+    from repro.recovery import get_strategy_cls, make_strategy
+    protect = not get_strategy_cls(strategy).uses_swap_schedule
     rcfg = RecoveryConfig(
         strategy=strategy, num_stages=BENCH_STAGES,
         checkpoint_every=ckpt_every,
         checkpoint_dir=os.path.join("/tmp/repro_bench_ckpt",
                                     _cache_key(kw)),
         failure_rate_per_hour=rate, seed=failure_seed,
-        protect_edge_stages=strategy != "checkfree_plus")
+        protect_edge_stages=protect)
     tcfg = TrainConfig(
         global_batch=BENCH_BATCH, microbatch=BENCH_BATCH, seq_len=BENCH_SEQ,
         steps=steps, eval_every=EVAL_EVERY, seed=seed,
@@ -141,7 +145,13 @@ def run_strategy(*, strategy: str, rate: float = 0.10,
         steps=hist.steps, wall_time=hist.wall_time, loss=hist.loss,
         eval_loss=hist.eval_loss, failures=hist.failures,
         recovery_errors=hist.recovery_errors, wall_iters=hist.wall_iters,
-        iter_time_s=wall.iteration_cost(strategy, ckpt_every),
+        # seed-independent per-iteration cost: a fresh strategy (adaptive
+        # starts in its calm/low mode, so this never depends on where a
+        # particular run's sliding window happened to end)
+        iter_time_s=make_strategy(rcfg, wall=wall).iteration_cost(),
+        # effective rate actually paid, failures included
+        avg_iter_time_s=(hist.wall_time[-1] / max(hist.wall_iters, 1)
+                         if hist.wall_time else float("nan")),
         n_failures=len(hist.failures),
         final_loss=hist.loss[-1] if hist.loss else float("nan"),
         final_eval=hist.eval_loss[-1][2] if hist.eval_loss else float("nan"),

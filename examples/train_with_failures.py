@@ -20,15 +20,23 @@ from repro.core.trainer import Trainer
 from repro.core.walltime import WallClockModel
 from repro.data.pipeline import make_batches, SyntheticLM, batch_for
 from repro.models.model import build_model
+from repro.recovery import available_strategies
 
 import numpy as np
+
+DEFAULT_STRATEGIES = ["checkfree", "checkfree_plus", "checkpoint",
+                      "redundant"]
 
 
 def run(strategy: str, cfg, stages: int, steps: int, rate: float,
         seq: int, batch: int):
+    # paper protocol: edge stages are protected for every policy without
+    # swap-trained twins (only CheckFree+'s swap schedule makes them losable)
+    from repro.recovery import get_strategy_cls
+    protect = not get_strategy_cls(strategy).uses_swap_schedule
     rcfg = RecoveryConfig(strategy=strategy, num_stages=stages,
                           failure_rate_per_hour=rate,
-                          protect_edge_stages=strategy != "checkfree_plus")
+                          protect_edge_stages=protect)
     tcfg = TrainConfig(global_batch=batch, microbatch=batch, seq_len=seq,
                        steps=steps, eval_every=max(steps // 6, 1),
                        optimizer=OptimizerConfig(lr=6e-4, total_steps=steps),
@@ -57,7 +65,16 @@ def main() -> None:
                     help="the real 124M model (paper Table 4 small)")
     ap.add_argument("--steps", type=int, default=0)
     ap.add_argument("--rate", type=float, default=0.10)
+    ap.add_argument("--strategies", default=",".join(DEFAULT_STRATEGIES),
+                    help="comma-separated registry names (see "
+                         "repro.recovery.available_strategies); e.g. add "
+                         "'adaptive' to compare the policy-switching hybrid")
     args = ap.parse_args()
+
+    strategies = [s for s in args.strategies.split(",") if s]
+    unknown = set(strategies) - set(available_strategies())
+    assert not unknown, f"unknown strategies {sorted(unknown)}; " \
+                        f"available: {available_strategies()}"
 
     if args.full:
         cfg = get_config("paper-llama-124m")
@@ -75,8 +92,7 @@ def main() -> None:
           f"{stages} stages, {steps} steps, {args.rate:.0%}/h churn\n")
 
     rows = []
-    for strategy in ["checkfree", "checkfree_plus", "checkpoint",
-                     "redundant"]:
+    for strategy in strategies:
         hist = run(strategy, cfg, stages, steps, args.rate, seq, batch)
         best = min(e for _, _, e in hist.eval_loss) if hist.eval_loss \
             else float("nan")

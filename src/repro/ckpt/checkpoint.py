@@ -84,6 +84,10 @@ class Checkpointer:
         self._gc()
         return True
 
+    def has_checkpoint(self) -> bool:
+        """True once at least one save landed (rollback will not raise)."""
+        return latest_step(self.dir) is not None
+
     def rollback(self, current_step: int, template: Pytree,
                  ) -> Tuple[int, Pytree, int]:
         """Returns (ckpt_step, tree, lost_iterations)."""

@@ -208,8 +208,10 @@ class OptimizerConfig:
 class RecoveryConfig:
     """CheckFree / CheckFree+ configuration (the paper's contribution)."""
 
-    strategy: str = "checkfree"       # checkfree | checkfree_plus | checkpoint |
-                                      # redundant | none | copy | random
+    strategy: str = "checkfree"       # any name in repro.recovery's registry:
+                                      # checkfree | checkfree_plus | checkpoint |
+                                      # redundant | none | copy | uniform |
+                                      # random | adaptive | <custom plugins>
     num_stages: int = 4               # transformer stages (excl. embed stage S0)
     lr_boost: float = 1.1             # Alg.1 line 4
     lr_boost_decay: float = 0.995     # per-step decay of the boost back to 1.0
@@ -223,6 +225,11 @@ class RecoveryConfig:
     iteration_time_s: float = 91.3        # paper Table 2 medium-model iteration
     seed: int = 0
     protect_edge_stages: bool = True  # CheckFree (not +) cannot lose S_first/S_last
+    # --- adaptive (strategy="adaptive"): Chameleon-style policy switching ---
+    adaptive_low: str = "checkfree"   # active while the observed rate is calm
+    adaptive_high: str = "checkpoint" # active above the threshold
+    adaptive_window: int = 32         # sliding window length (wall iterations)
+    adaptive_threshold: float = 0.05  # failures/iteration that trips to high
 
 
 @dataclass(frozen=True)

@@ -33,8 +33,10 @@ class FailureSchedule:
         self.iter_time = iteration_time_s
         self.num_stages = num_stages
         self.steps = steps
-        # per-iteration failure probability per stage
-        self.p_iter = rate_per_hour * iteration_time_s / 3600.0
+        # per-iteration failure probability per stage; extreme
+        # rate * iteration_time products must stay a valid probability
+        self.p_iter = min(max(rate_per_hour * iteration_time_s / 3600.0, 0.0),
+                          1.0)
         rng = np.random.default_rng(seed)
         events: List[FailureEvent] = []
         lo = 1 if protect_edges else 0

@@ -1,0 +1,33 @@
+"""Training-loop state containers, shared by the trainer and the recovery
+strategies (kept free of trainer imports so ``repro.recovery`` can construct
+:class:`TrainState` without a cycle)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+
+from repro.optim.adam import OptState
+
+Params = Any
+
+
+@dataclass
+class TrainState:
+    params: Params
+    opt_state: OptState
+    lr_scale: float = 1.0
+    omegas: Optional[np.ndarray] = None      # last per-stage ||grad||^2
+    effective_step: int = 0                  # optimization progress
+
+
+@dataclass
+class History:
+    steps: List[int] = field(default_factory=list)
+    wall_time: List[float] = field(default_factory=list)
+    loss: List[float] = field(default_factory=list)
+    eval_loss: List[Tuple[int, float, float]] = field(default_factory=list)
+    failures: List[Tuple[int, int]] = field(default_factory=list)
+    recovery_errors: List[Tuple[int, float]] = field(default_factory=list)
+    wall_iters: int = 0

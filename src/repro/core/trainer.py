@@ -1,18 +1,19 @@
 """Failure-aware trainer: the paper's training loop with pluggable recovery
 strategies.
 
-The trainer executes *wall iterations*; a recovery strategy reacts to failure
-events (same seeded schedule across strategies), mutating the train state
-(CheckFree merge / checkpoint rollback / redundant promote) and charging
-wall-clock per the :class:`WallClockModel`.  CheckFree+'s out-of-order
-microbatches are realized by computing half the batch through a swapped
-stage order (a static layer-index gather — see core/swap.py).
+The trainer executes *wall iterations*; a :class:`~repro.recovery.base.
+RecoveryStrategy` (constructed from ``RecoveryConfig`` via the registry)
+reacts to failure events (same seeded schedule across strategies), mutating
+the train state (CheckFree merge / checkpoint rollback / redundant promote)
+and pricing wall-clock through its ``iteration_cost``/``failure_cost``.
+The loop itself is strategy-agnostic: it only consults the strategy's
+lifecycle hooks and capability flags, never its name.  CheckFree+'s
+out-of-order microbatches are realized by computing half the batch through a
+swapped stage order (a static layer-index gather — see core/swap.py).
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from functools import partial
+import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -21,36 +22,15 @@ import numpy as np
 
 from repro.config import ModelConfig, OptimizerConfig, RecoveryConfig, TrainConfig
 from repro.core.failures import FailureSchedule
-from repro.core.recovery import (recover_consecutive, recover_stage,
-                                 recovery_error)
 from repro.core.stages import StagePartition
+from repro.core.state import History, TrainState  # noqa: F401  (re-export)
 from repro.core.swap import swap_permutation
 from repro.core.walltime import WallClockModel
-from repro.ckpt.checkpoint import Checkpointer
 from repro.models.model import Model
-from repro.optim.adam import OptState, adam_update, init_adam
+from repro.optim.adam import adam_update, init_adam
+from repro.recovery import FailureContext, RecoveryStrategy, make_strategy
 
 Params = Any
-
-
-@dataclass
-class TrainState:
-    params: Params
-    opt_state: OptState
-    lr_scale: float = 1.0
-    omegas: Optional[np.ndarray] = None      # last per-stage ||grad||^2
-    effective_step: int = 0                  # optimization progress
-
-
-@dataclass
-class History:
-    steps: List[int] = field(default_factory=list)
-    wall_time: List[float] = field(default_factory=list)
-    loss: List[float] = field(default_factory=list)
-    eval_loss: List[Tuple[int, float, float]] = field(default_factory=list)
-    failures: List[Tuple[int, int]] = field(default_factory=list)
-    recovery_errors: List[Tuple[int, float]] = field(default_factory=list)
-    wall_iters: int = 0
 
 
 def _permute_tower(params: Params, tower_key: str, idx: jnp.ndarray) -> Params:
@@ -118,97 +98,26 @@ class Trainer:
         self.model = model
         self.tcfg = tcfg
         self.rcfg = tcfg.recovery
-        self.strategy = self.rcfg.strategy
         self.part = StagePartition(model.cfg, self.rcfg.num_stages)
-        self.wall = wall or WallClockModel(
-            iter_time_s=self.rcfg.iteration_time_s)
+        self.strategy: RecoveryStrategy = make_strategy(self.rcfg, wall=wall)
+        self.wall = self.strategy.wall
         self.schedule = schedule
-        use_swap = self.strategy == "checkfree_plus"
-        self.train_step = make_train_step(model, tcfg.optimizer, self.part,
-                                          use_swap=use_swap)
+
+        def fresh_init():
+            params = self.model.init(jax.random.PRNGKey(tcfg.seed))
+            return params, init_adam(params)
+
+        self.strategy.bind(self.part, init_fn=fresh_init)
+        self.train_step = make_train_step(
+            model, tcfg.optimizer, self.part,
+            use_swap=self.strategy.uses_swap_schedule)
         self.eval_step = make_eval_step(model)
-        self.ckpt: Optional[Checkpointer] = None
-        if self.strategy == "checkpoint":
-            self.ckpt = Checkpointer(self.rcfg.checkpoint_dir,
-                                     self.rcfg.checkpoint_every)
-
-    # ---- failure handling -------------------------------------------
-    def _handle_failure(self, stage: int, state: TrainState,
-                        hist: History, wall_step: int,
-                        key: jax.Array) -> TrainState:
-        strat = self.strategy
-        if strat == "none":
-            return state
-        if strat == "redundant":
-            # Bamboo: previous stage promotes its redundant copy — weights
-            # recovered exactly; only wall-clock is charged.
-            return state
-        if strat == "checkpoint":
-            assert self.ckpt is not None
-            tpl = (state.params, state.opt_state)
-            try:
-                step, (params, opt_state), lost = self.ckpt.rollback(
-                    state.effective_step, tpl)
-            except RuntimeError:   # no checkpoint yet -> restart from init
-                return state
-            hist.recovery_errors.append((wall_step, float("nan")))
-            return TrainState(params, opt_state, state.lr_scale,
-                              state.omegas, effective_step=step)
-
-        # CheckFree family: merge neighbours (or ablation variants)
-        reinit = {"checkfree": "grad_norm", "checkfree_plus": "grad_norm",
-                  "uniform": "uniform", "copy": "copy_prev",
-                  "random": "random"}[strat]
-        k = self.part.num_stages
-        if strat == "checkfree" and stage in (0, k - 1):
-            # CheckFree (no '+') cannot recover edge stages — the paper
-            # protects them; if an event still arrives, degrade to copy.
-            reinit = "copy_prev"
-        omegas = jnp.asarray(state.omegas if state.omegas is not None
-                             else np.ones((k,), np.float32))
-        before = state.params
-        params = recover_stage(before, self.part, stage, omegas,
-                               strategy=reinit, key=key)
-        err = float(recovery_error(before, params, self.part, stage))
-        hist.recovery_errors.append((wall_step, err))
-        # the failed node's optimizer moments are gone: zero that stage
-        zeros = jax.tree.map(jnp.zeros_like,
-                             self.part.get_stage(state.opt_state.m, stage))
-        m = self.part.set_stage(state.opt_state.m, stage, zeros)
-        v = self.part.set_stage(state.opt_state.v, stage, zeros)
-        opt_state = OptState(m, v, state.opt_state.step)
-        lr_scale = min(state.lr_scale * self.rcfg.lr_boost,
-                       self.rcfg.lr_boost_cap)  # Alg. 1 line 4 (capped)
-        return TrainState(params, opt_state, lr_scale, state.omegas,
-                          state.effective_step)
-
-    def _handle_consecutive(self, run: List[int], state: TrainState,
-                            hist: History, wall_step: int) -> TrainState:
-        """Beyond-paper: a run of consecutive stages died together."""
-        k = self.part.num_stages
-        omegas = jnp.asarray(state.omegas if state.omegas is not None
-                             else np.ones((k,), np.float32))
-        before = state.params
-        params = recover_consecutive(before, self.part, run, omegas)
-        for stage in run:
-            err = float(recovery_error(before, params, self.part, stage))
-            hist.recovery_errors.append((wall_step, err))
-        opt_state = state.opt_state
-        m, v = opt_state.m, opt_state.v
-        for stage in run:
-            zeros = jax.tree.map(jnp.zeros_like,
-                                 self.part.get_stage(m, stage))
-            m = self.part.set_stage(m, stage, zeros)
-            v = self.part.set_stage(v, stage, zeros)
-        lr_scale = min(state.lr_scale * self.rcfg.lr_boost,
-                       self.rcfg.lr_boost_cap)
-        return TrainState(params, OptState(m, v, opt_state.step), lr_scale,
-                          state.omegas, state.effective_step)
 
     # ---- main loop ----------------------------------------------------
     def run(self, batches, eval_batches: Optional[List] = None,
             verbose: bool = False) -> Tuple[TrainState, History]:
         tcfg = self.tcfg
+        strategy = self.strategy
         key = jax.random.PRNGKey(tcfg.seed)
         params = self.model.init(key)
         state = TrainState(params, init_adam(params))
@@ -227,6 +136,7 @@ class Trainer:
         while state.effective_step < tcfg.steps and wall_step < max_wall:
             # 1) failures arrive at iteration boundaries; consecutive-stage
             #    runs (beyond-paper, §6 future work) are recovered together
+            #    when the strategy advertises the capability
             if self.schedule is not None:
                 stages = sorted(self.schedule.at(wall_step))
                 runs: List[List[int]] = []
@@ -237,17 +147,17 @@ class Trainer:
                         runs.append([stage])
                 for run in runs:
                     key, sub = jax.random.split(key)
-                    if len(run) > 1 and self.strategy in (
-                            "checkfree", "checkfree_plus"):
-                        state = self._handle_consecutive(run, state, hist,
-                                                         wall_step)
+                    event = FailureContext(stage=run[0], wall_step=wall_step,
+                                           key=sub, hist=hist)
+                    if len(run) > 1 and strategy.handles_consecutive:
+                        state = strategy.on_consecutive(state, run, event)
                     else:
                         for stage in run:
-                            state = self._handle_failure(stage, state, hist,
-                                                         wall_step, sub)
+                            state = strategy.on_failure(
+                                state, dataclasses.replace(event, stage=stage))
                     for stage in run:
                         hist.failures.append((wall_step, stage))
-                        clock += self.wall.failure_cost(self.strategy)
+                        clock += strategy.failure_cost()
 
             # 2) one training iteration
             batch = batch_at(state.effective_step)
@@ -259,13 +169,10 @@ class Trainer:
             state = TrainState(params, opt_state, new_scale,
                                np.asarray(omegas),
                                state.effective_step + 1)
-            clock += self.wall.iteration_cost(self.strategy,
-                                              self.rcfg.checkpoint_every)
+            clock += strategy.iteration_cost()
 
-            # 3) strategy bookkeeping
-            if self.ckpt is not None:
-                self.ckpt.maybe_save(state.effective_step,
-                                     (state.params, state.opt_state))
+            # 3) strategy bookkeeping (checkpoint saves, adaptive windows...)
+            strategy.after_step(state, hist)
 
             hist.steps.append(state.effective_step)
             hist.wall_time.append(clock)

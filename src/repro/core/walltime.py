@@ -7,6 +7,12 @@ paper's measurements (redundant computation = 151.0/91.3 = 1.654x iteration
 time; CheckFree stage recovery ~= 30 s; checkpoint saves cost
 bytes/bandwidth against the external storage; rollback repeats lost
 iterations).
+
+The model itself only holds timing *constants*; how they combine per policy
+lives on each :class:`~repro.recovery.base.RecoveryStrategy`
+(``iteration_cost`` / ``failure_cost``).  The string-keyed methods below are
+a legacy shim that delegates to the registry, kept for benchmarks and tests
+that price a policy without building a trainer.
 """
 from __future__ import annotations
 
@@ -18,6 +24,7 @@ class WallClockModel:
     iter_time_s: float = 91.3            # paper Table 2 (medium model)
     redundant_factor: float = 151.0 / 91.3
     recovery_time_s: float = 30.0        # paper §5.1 (CheckFree stage reinit)
+    promote_time_s: float = 5.0          # promote redundant copy: near-instant
     ckpt_bandwidth_Bps: float = 62.5e6   # 500 Mb/s to non-faulty storage (fn.2)
     restart_overhead_s: float = 60.0     # checkpoint rollback: redeploy + load
     model_bytes: int = int(2e9)          # serialized model+opt (500M fp32 ~ 8GB/4)
@@ -25,22 +32,19 @@ class WallClockModel:
     def ckpt_save_time_s(self) -> float:
         return self.model_bytes / self.ckpt_bandwidth_Bps
 
+    # ---- legacy string-dispatch shim (delegates to the registry) --------
+    def _strategy(self, name: str, ckpt_every: int = 100):
+        from repro.config import RecoveryConfig
+        from repro.recovery import make_strategy
+        return make_strategy(
+            RecoveryConfig(strategy=name, checkpoint_every=ckpt_every),
+            wall=self)
+
     def iteration_cost(self, strategy: str, ckpt_every: int = 100) -> float:
-        if strategy == "redundant":
-            return self.iter_time_s * self.redundant_factor
-        if strategy == "checkpoint":
-            # saves overlap training partially; amortized residual overhead
-            return self.iter_time_s + 0.1 * self.ckpt_save_time_s() / ckpt_every
-        return self.iter_time_s  # checkfree / checkfree_plus / none
+        """Modelled seconds per wall iteration under ``strategy``."""
+        return self._strategy(strategy, ckpt_every).iteration_cost()
 
     def failure_cost(self, strategy: str) -> float:
         """Extra seconds per failure event (excluding rollback re-training,
         which the trainer accounts for by replaying iterations)."""
-        if strategy in ("checkfree", "checkfree_plus", "copy", "random",
-                        "uniform"):
-            return self.recovery_time_s
-        if strategy == "redundant":
-            return 5.0  # promote redundant weights: local, near-instant
-        if strategy == "checkpoint":
-            return self.restart_overhead_s + self.ckpt_save_time_s()
-        return 0.0
+        return self._strategy(strategy).failure_cost()

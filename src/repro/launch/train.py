@@ -22,6 +22,7 @@ from repro.core.trainer import Trainer
 from repro.core.walltime import WallClockModel
 from repro.data.pipeline import batch_for, make_batches, SyntheticLM
 from repro.models.model import build_model
+from repro.recovery import available_strategies
 
 import numpy as np
 
@@ -31,9 +32,7 @@ def main() -> None:
     ap.add_argument("--arch", default="paper-llama-124m",
                     choices=sorted(ARCHS) + sorted(PAPER_MODELS))
     ap.add_argument("--strategy", default="checkfree",
-                    choices=["checkfree", "checkfree_plus", "checkpoint",
-                             "redundant", "none", "copy", "random",
-                             "uniform"])
+                    choices=available_strategies())
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--rate", type=float, default=0.10,
                     help="hourly per-stage failure probability")
@@ -60,10 +59,14 @@ def main() -> None:
     seq = args.seq or min(cfg.max_seq_len, 512)
     lr = args.lr or 3e-4
 
+    # paper protocol: edge stages are protected for every policy without
+    # swap-trained twins (only CheckFree+'s swap schedule makes them losable)
+    from repro.recovery import get_strategy_cls
+    protect = not get_strategy_cls(args.strategy).uses_swap_schedule
     rcfg = RecoveryConfig(
         strategy=args.strategy, num_stages=stages,
         failure_rate_per_hour=args.rate, seed=args.seed,
-        protect_edge_stages=args.strategy != "checkfree_plus")
+        protect_edge_stages=protect)
     tcfg = TrainConfig(
         global_batch=args.batch, microbatch=args.batch, seq_len=seq,
         steps=args.steps, eval_every=max(args.steps // 10, 1),

@@ -26,6 +26,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.5 exports shard_map at the top level
+    shard_map = jax.shard_map
+except AttributeError:  # older jax: experimental namespace
+    from jax.experimental.shard_map import shard_map
+
 from repro.config import ModelConfig
 from repro.models import layers as L
 from repro.models import transformer as T
@@ -112,7 +117,7 @@ def pipeline_loss(cfg: ModelConfig, mesh: Mesh, num_stages: int,
     @functools.partial(jax.jit)
     def loss_fn(params, tokens, labels):
         specs = param_pipeline_specs(params, K)
-        f = jax.shard_map(
+        f = shard_map(
             per_device, mesh=mesh,
             in_specs=(specs, P(), P()), out_specs=P())
         return f(params, tokens, labels)
@@ -152,7 +157,7 @@ def checkfree_recover_spmd(mesh: Mesh, num_stages: int):
 
             return jax.tree.map(merge, blocks, w_prev, w_next)
 
-        return jax.jit(jax.shard_map(
+        return jax.jit(shard_map(
             per_device, mesh=mesh,
             in_specs=(P("stage"), P()), out_specs=P("stage")))
 

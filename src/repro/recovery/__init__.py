@@ -1,0 +1,19 @@
+"""First-class recovery strategies: the pluggable policy API.
+
+    from repro.recovery import make_strategy, register_strategy
+
+    strategy = make_strategy(rcfg)           # rcfg.strategy names a policy
+    state = strategy.on_failure(state, event)
+
+See ``docs/recovery_api.md`` for the interface contract and a worked example
+of writing a custom strategy.
+"""
+from repro.recovery.base import (FailureContext,  # noqa: F401
+                                 RecoveryStrategy)
+from repro.recovery.registry import (available_strategies,  # noqa: F401
+                                     get_strategy_cls, make_strategy,
+                                     register_strategy)
+
+# import for registration side effects: the built-in policies
+from repro.recovery import strategies as _strategies  # noqa: F401,E402
+from repro.recovery import adaptive as _adaptive  # noqa: F401,E402

@@ -1,0 +1,113 @@
+"""Adaptive recovery — runtime policy switching (the Chameleon idea,
+arXiv 2508.21613), the first strategy only expressible on the new API.
+
+Wraps two child strategies from the registry: a cheap optimistic policy for
+calm periods (default CheckFree) and a conservative one for stormy periods
+(default checkpointing).  A sliding window over the last
+``adaptive_window`` wall iterations tracks the empirical failure rate
+(failures per iteration); when it crosses ``adaptive_threshold`` the active
+policy switches to ``adaptive_high``, and back once the window drains.
+
+The high child's ``after_step`` bookkeeping runs even while the low policy is
+active ("shadow checkpointing"), so a switch under fire has warm state to
+roll back to; the wall-clock model only charges the active child's iteration
+cost (the optimistic async-save assumption).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Tuple
+
+from repro.core.state import History, TrainState
+from repro.recovery.base import FailureContext, RecoveryStrategy
+from repro.recovery.registry import make_strategy, register_strategy
+
+
+@register_strategy("adaptive")
+class Adaptive(RecoveryStrategy):
+
+    def __init__(self, rcfg, wall):
+        super().__init__(rcfg, wall)
+        low, high = rcfg.adaptive_low, rcfg.adaptive_high
+        if "adaptive" in (low, high):
+            raise ValueError("adaptive children must be concrete strategies")
+        self.low = make_strategy(
+            dataclasses.replace(rcfg, strategy=low), wall=wall)
+        # same policy both sides -> one shared instance, so the after_step
+        # guard below really does prevent double bookkeeping
+        self.high = self.low if high == low else make_strategy(
+            dataclasses.replace(rcfg, strategy=high), wall=wall)
+        self.active = self.low
+        self._window = deque(maxlen=max(rcfg.adaptive_window, 1))
+        self._pending = 0          # failures since the last wall iteration
+        # (effective_step, from, to) switch log — inspectable by benchmarks
+        self.switches: List[Tuple[int, str, str]] = []
+
+    # ---- capability flags follow the children -------------------------
+    # On instances these delegate dynamically; on the class itself they
+    # report the conservative default (registry tooling inspects classes).
+    class _ChildFlag:
+        def __init__(self, getter, class_default: bool):
+            self._getter = getter
+            self._default = class_default
+
+        def __get__(self, obj, objtype=None) -> bool:
+            return self._default if obj is None else self._getter(obj)
+
+    handles_edge_stages = _ChildFlag(
+        lambda self: self.active.handles_edge_stages, False)
+    handles_consecutive = _ChildFlag(
+        lambda self: self.active.handles_consecutive, False)
+    # swap is static: the train step is built once, before any switching
+    uses_swap_schedule = _ChildFlag(
+        lambda self: (self.low.uses_swap_schedule or
+                      self.high.uses_swap_schedule), False)
+
+    # ---- wiring -------------------------------------------------------
+    def bind(self, part, init_fn=None) -> "Adaptive":
+        super().bind(part, init_fn)
+        self.low.bind(part, init_fn)
+        self.high.bind(part, init_fn)
+        return self
+
+    # ---- lifecycle ----------------------------------------------------
+    def failure_rate(self) -> float:
+        """Empirical failures per wall iteration over the sliding window."""
+        if not self._window:
+            return 0.0
+        return sum(self._window) / len(self._window)
+
+    def on_failure(self, state: TrainState,
+                   event: FailureContext) -> TrainState:
+        self._pending += 1
+        return self.active.on_failure(state, event)
+
+    def on_consecutive(self, state: TrainState, run: List[int],
+                       event: FailureContext) -> TrainState:
+        self._pending += len(run)
+        return self.active.on_consecutive(state, run, event)
+
+    def after_step(self, state: TrainState, hist: History) -> None:
+        self._window.append(self._pending)
+        self._pending = 0
+        want = (self.high if self.failure_rate() > self.rcfg.adaptive_threshold
+                else self.low)
+        if want is not self.active:
+            self.switches.append((state.effective_step,
+                                  self.active.name, want.name))
+            self.active = want
+        self.low.after_step(state, hist)
+        if self.high is not self.low:
+            self.high.after_step(state, hist)
+
+    # ---- wall-clock model --------------------------------------------
+    def iteration_cost(self) -> float:
+        return self.active.iteration_cost()
+
+    def failure_cost(self) -> float:
+        return self.active.failure_cost()
+
+    def __repr__(self) -> str:
+        return (f"Adaptive(low={self.low.name}, high={self.high.name}, "
+                f"active={self.active.name}, rate={self.failure_rate():.3f})")

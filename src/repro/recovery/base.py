@@ -1,0 +1,110 @@
+"""The :class:`RecoveryStrategy` interface — recovery policies as first-class
+objects.
+
+The paper's contribution is a *family* of recovery policies (CheckFree,
+CheckFree+, checkpointing, redundancy, the Fig. 2 ablation reinits); follow-up
+work (Chameleon, arXiv 2508.21613; TierCheck) composes and *switches* them at
+runtime.  A strategy therefore owns the full policy surface the trainer used
+to string-dispatch over:
+
+lifecycle hooks (called by the trainer)
+  ``on_failure(state, event)``      — one stage died at an iteration boundary
+  ``on_consecutive(state, run, event)`` — a run of adjacent stages died
+                                      together (only if ``handles_consecutive``)
+  ``after_step(state, hist)``       — bookkeeping after every wall iteration
+                                      (checkpoint saves, window statistics)
+
+wall-clock model (absorbing ``WallClockModel``'s per-strategy dispatch)
+  ``iteration_cost()``  — modelled seconds per wall iteration
+  ``failure_cost()``    — extra modelled seconds per failure event
+
+capability flags (drive trainer wiring — the trainer never looks at names)
+  ``handles_edge_stages``  — can recover S_first/S_last losslessly; when
+                             False the strategy degrades edge failures itself
+  ``handles_consecutive``  — recovers a run of adjacent failed stages jointly
+  ``uses_swap_schedule``   — the train step must run CheckFree+'s swapped
+                             stage order on half the batch
+
+Strategies are selected purely through the registry
+(:func:`repro.recovery.registry.make_strategy`); writing a new policy is a
+subclass + ``@register_strategy("name")`` — no trainer surgery.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, ClassVar, List, Optional, Tuple, TYPE_CHECKING
+
+import jax
+
+if TYPE_CHECKING:  # pragma: no cover — typing only, no import cycles
+    from repro.config import RecoveryConfig
+    from repro.core.state import History, TrainState
+    from repro.core.stages import StagePartition
+    from repro.core.walltime import WallClockModel
+
+# () -> (params, opt_state): a deterministic from-scratch reinitialization
+InitFn = Callable[[], Tuple[Any, Any]]
+
+
+@dataclass
+class FailureContext:
+    """Everything a strategy may consult when reacting to a failure event."""
+
+    stage: int                 # 0-based failed stage (run[0] for runs)
+    wall_step: int             # wall-iteration index of the event
+    key: jax.Array             # PRNG key (random reinit ablation)
+    hist: "History"            # strategies append recovery_errors here
+
+
+class RecoveryStrategy:
+    """Base class: a no-op policy (registered as ``none``).
+
+    Subclasses override the hooks they need; the defaults are "do nothing,
+    charge one plain iteration, recover for free".
+    """
+
+    name: ClassVar[str] = "none"           # set by @register_strategy
+    handles_edge_stages: ClassVar[bool] = True
+    handles_consecutive: ClassVar[bool] = False
+    uses_swap_schedule: ClassVar[bool] = False
+
+    def __init__(self, rcfg: "RecoveryConfig", wall: "WallClockModel"):
+        self.rcfg = rcfg
+        self.wall = wall
+        self.part: Optional["StagePartition"] = None
+        self.init_fn: Optional[InitFn] = None
+
+    # ---- trainer wiring ----------------------------------------------
+    def bind(self, part: "StagePartition",
+             init_fn: Optional[InitFn] = None) -> "RecoveryStrategy":
+        """Attach the stage partition (and a from-scratch init for policies
+        that may have to restart).  Called once by the trainer."""
+        self.part = part
+        self.init_fn = init_fn
+        return self
+
+    # ---- lifecycle ---------------------------------------------------
+    def on_failure(self, state: "TrainState",
+                   event: FailureContext) -> "TrainState":
+        return state
+
+    def on_consecutive(self, state: "TrainState", run: List[int],
+                       event: FailureContext) -> "TrainState":
+        """Default: recover each stage of the run independently."""
+        from dataclasses import replace
+        for stage in run:
+            state = self.on_failure(state, replace(event, stage=stage))
+        return state
+
+    def after_step(self, state: "TrainState", hist: "History") -> None:
+        pass
+
+    # ---- wall-clock model --------------------------------------------
+    def iteration_cost(self) -> float:
+        return self.wall.iter_time_s
+
+    def failure_cost(self) -> float:
+        return 0.0
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}(name={self.name!r})"

@@ -1,0 +1,61 @@
+"""Strategy registry: config string -> RecoveryStrategy instance.
+
+    @register_strategy("my_policy")
+    class MyPolicy(RecoveryStrategy):
+        ...
+
+    strategy = make_strategy(rcfg)          # rcfg.strategy == "my_policy"
+
+Registration is import-time; ``repro.recovery.__init__`` imports the built-in
+modules so every config-selectable name is present as soon as the package is.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Type, TYPE_CHECKING
+
+from repro.recovery.base import RecoveryStrategy
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.config import RecoveryConfig
+    from repro.core.walltime import WallClockModel
+
+_REGISTRY: Dict[str, Type[RecoveryStrategy]] = {}
+
+
+def register_strategy(name: str) -> Callable[[Type[RecoveryStrategy]],
+                                             Type[RecoveryStrategy]]:
+    def deco(cls: Type[RecoveryStrategy]) -> Type[RecoveryStrategy]:
+        assert issubclass(cls, RecoveryStrategy), cls
+        if name in _REGISTRY and _REGISTRY[name] is not cls:
+            raise ValueError(f"strategy {name!r} already registered "
+                             f"({_REGISTRY[name].__name__})")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def available_strategies() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def get_strategy_cls(name: str) -> Type[RecoveryStrategy]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown recovery strategy {name!r}; available: "
+                       f"{available_strategies()}") from None
+
+
+def make_strategy(rcfg: "RecoveryConfig",
+                  wall: Optional["WallClockModel"] = None) -> RecoveryStrategy:
+    """Instantiate the strategy named by ``rcfg.strategy``.
+
+    Construction is side-effect-free (no checkpoint directories are touched
+    until the trainer actually runs), so this is also safe to use for pure
+    cost queries — ``WallClockModel``'s legacy string API delegates here.
+    """
+    if wall is None:
+        from repro.core.walltime import WallClockModel
+        wall = WallClockModel(iter_time_s=rcfg.iteration_time_s)
+    return get_strategy_cls(rcfg.strategy)(rcfg, wall)

@@ -1,0 +1,189 @@
+"""The paper's recovery policies, ported onto :class:`RecoveryStrategy`.
+
+Seven config-selectable built-ins:
+
+  checkfree       — Alg. 1 gradient-norm-weighted neighbour merge; edge
+                    stages degrade to copy (the paper protects them)
+  checkfree_plus  — + swap schedule, so edge stages have trained twins
+  checkpoint      — periodic save / rollback baseline (restarts from a fresh
+                    init when a failure precedes the first save)
+  redundant       — Bamboo-style redundant computation: exact weights, paid
+                    for with a 1.654x iteration time (Table 2)
+  none            — ignore failures (convergence lower bound)
+  copy / uniform / random — the Fig. 2 ablation reinits
+
+All recovery math lives in ``repro.core.recovery`` (pure pytree functions);
+these classes bind it to the trainer lifecycle and the wall-clock model.
+"""
+from __future__ import annotations
+
+from typing import ClassVar, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.checkpoint import Checkpointer
+from repro.core.recovery import (recover_consecutive, recover_stage,
+                                 recovery_error)
+from repro.core.state import History, TrainState
+from repro.optim.adam import OptState
+from repro.recovery.base import FailureContext, RecoveryStrategy
+from repro.recovery.registry import register_strategy
+
+
+@register_strategy("none")
+class NoRecovery(RecoveryStrategy):
+    """Failures are ignored — the paper's convergence lower bound."""
+
+
+@register_strategy("redundant")
+class Redundant(RecoveryStrategy):
+    """Bamboo: each stage's predecessor holds a redundant copy; on failure it
+    promotes the copy, so weights are recovered exactly and only wall-clock
+    is charged (every iteration pays the redundant-compute factor)."""
+
+    def iteration_cost(self) -> float:
+        return self.wall.iter_time_s * self.wall.redundant_factor
+
+    def failure_cost(self) -> float:
+        return self.wall.promote_time_s
+
+
+@register_strategy("checkpoint")
+class Checkpointing(RecoveryStrategy):
+    """Periodic full-model save + rollback (the paper's baseline).
+
+    The :class:`Checkpointer` is created lazily on first use so that strategy
+    construction stays side-effect-free (cost queries must not wipe
+    checkpoint directories).
+    """
+
+    def __init__(self, rcfg, wall):
+        super().__init__(rcfg, wall)
+        self._ckpt = None
+
+    @property
+    def checkpointer(self) -> Checkpointer:
+        if self._ckpt is None:
+            self._ckpt = Checkpointer(self.rcfg.checkpoint_dir,
+                                      self.rcfg.checkpoint_every)
+        return self._ckpt
+
+    def on_failure(self, state: TrainState,
+                   event: FailureContext) -> TrainState:
+        event.hist.recovery_errors.append((event.wall_step, float("nan")))
+        ckpt = self.checkpointer
+        if not ckpt.has_checkpoint():
+            # nothing saved yet -> restart from a fresh init at step 0
+            # (lr_scale resets too: any boost belonged to the lost trajectory)
+            assert self.init_fn is not None, "checkpoint strategy needs bind()"
+            params, opt_state = self.init_fn()
+            return TrainState(params, opt_state, lr_scale=1.0,
+                              omegas=None, effective_step=0)
+        step, (params, opt_state), _lost = ckpt.rollback(
+            state.effective_step, (state.params, state.opt_state))
+        return TrainState(params, opt_state, state.lr_scale,
+                          state.omegas, effective_step=step)
+
+    def after_step(self, state: TrainState, hist: History) -> None:
+        self.checkpointer.maybe_save(state.effective_step,
+                                     (state.params, state.opt_state))
+
+    def iteration_cost(self) -> float:
+        # saves overlap training partially; amortized residual overhead
+        return (self.wall.iter_time_s +
+                0.1 * self.wall.ckpt_save_time_s() / self.rcfg.checkpoint_every)
+
+    def failure_cost(self) -> float:
+        return self.wall.restart_overhead_s + self.wall.ckpt_save_time_s()
+
+
+class MergeRecovery(RecoveryStrategy):
+    """Shared CheckFree-family machinery: neighbour-merge reinit of the failed
+    stage, zeroed optimizer moments for that stage, Alg. 1's LR boost."""
+
+    reinit: ClassVar[str] = "grad_norm"
+
+    def _omegas(self, state: TrainState) -> jnp.ndarray:
+        k = self.part.num_stages
+        return jnp.asarray(state.omegas if state.omegas is not None
+                           else np.ones((k,), np.float32))
+
+    def _boosted(self, lr_scale: float) -> float:
+        return min(lr_scale * self.rcfg.lr_boost,
+                   self.rcfg.lr_boost_cap)  # Alg. 1 line 4 (capped)
+
+    def _zero_stage_moments(self, opt_state: OptState,
+                            stages: List[int]) -> OptState:
+        # the failed node's optimizer moments are gone: zero those stages
+        m, v = opt_state.m, opt_state.v
+        for stage in stages:
+            zeros = jax.tree.map(jnp.zeros_like,
+                                 self.part.get_stage(m, stage))
+            m = self.part.set_stage(m, stage, zeros)
+            v = self.part.set_stage(v, stage, zeros)
+        return OptState(m, v, opt_state.step)
+
+    def on_failure(self, state: TrainState,
+                   event: FailureContext) -> TrainState:
+        k = self.part.num_stages
+        reinit = self.reinit
+        if not self.handles_edge_stages and event.stage in (0, k - 1):
+            # CheckFree (no '+') cannot recover edge stages — the paper
+            # protects them; if an event still arrives, degrade to copy.
+            reinit = "copy_prev"
+        before = state.params
+        params = recover_stage(before, self.part, event.stage,
+                               self._omegas(state), strategy=reinit,
+                               key=event.key)
+        err = float(recovery_error(before, params, self.part, event.stage))
+        event.hist.recovery_errors.append((event.wall_step, err))
+        opt_state = self._zero_stage_moments(state.opt_state, [event.stage])
+        return TrainState(params, opt_state, self._boosted(state.lr_scale),
+                          state.omegas, state.effective_step)
+
+    def on_consecutive(self, state: TrainState, run: List[int],
+                       event: FailureContext) -> TrainState:
+        """Beyond-paper: a run of consecutive stages died together —
+        distance-weighted interpolation between the surviving flanks."""
+        before = state.params
+        params = recover_consecutive(before, self.part, run,
+                                     self._omegas(state))
+        for stage in run:
+            err = float(recovery_error(before, params, self.part, stage))
+            event.hist.recovery_errors.append((event.wall_step, err))
+        opt_state = self._zero_stage_moments(state.opt_state, run)
+        return TrainState(params, opt_state, self._boosted(state.lr_scale),
+                          state.omegas, state.effective_step)
+
+    def failure_cost(self) -> float:
+        return self.wall.recovery_time_s
+
+
+@register_strategy("checkfree")
+class CheckFree(MergeRecovery):
+    handles_edge_stages = False
+    handles_consecutive = True
+
+
+@register_strategy("checkfree_plus")
+class CheckFreePlus(MergeRecovery):
+    handles_edge_stages = True
+    handles_consecutive = True
+    uses_swap_schedule = True
+
+
+@register_strategy("uniform")
+class UniformMerge(MergeRecovery):
+    reinit = "uniform"
+
+
+@register_strategy("copy")
+class CopyPrev(MergeRecovery):
+    reinit = "copy_prev"
+
+
+@register_strategy("random")
+class RandomReinit(MergeRecovery):
+    reinit = "random"

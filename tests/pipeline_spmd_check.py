@@ -27,8 +27,14 @@ cfg = ModelConfig(
     dtype="float32", param_dtype="float32")
 
 assert len(jax.devices()) == 4, jax.devices()
-mesh = jax.make_mesh((K,), ("stage",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+# version-compatible mesh construction: AxisType only exists in newer JAX
+if hasattr(jax.sharding, "AxisType"):
+    mesh = jax.make_mesh((K,), ("stage",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+elif hasattr(jax, "make_mesh"):
+    mesh = jax.make_mesh((K,), ("stage",))
+else:
+    mesh = jax.sharding.Mesh(np.array(jax.devices()).reshape(K), ("stage",))
 
 model = build_model(cfg)
 params = model.init(jax.random.PRNGKey(0))

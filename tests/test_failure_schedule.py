@@ -1,0 +1,28 @@
+"""FailureSchedule probability clamping: extreme rate x iteration-time
+products must stay valid probabilities (satellite of the recovery-API PR)."""
+import numpy as np
+
+from repro.core.failures import FailureSchedule
+
+
+def test_p_iter_clamped_to_unit_interval():
+    # rate_per_hour * iteration_time_s / 3600 >> 1 without clamping
+    fs = FailureSchedule(rate_per_hour=1e6, iteration_time_s=1e6,
+                         num_stages=4, steps=5, seed=0)
+    assert fs.p_iter == 1.0
+    # p == 1: every step fails as many non-adjacent stages as fit
+    assert all(len(fs.at(step)) > 0 for step in range(5))
+
+
+def test_p_iter_never_negative():
+    fs = FailureSchedule(rate_per_hour=-3.0, iteration_time_s=600.0,
+                         num_stages=4, steps=10, seed=0)
+    assert fs.p_iter == 0.0
+    assert len(fs) == 0
+
+
+def test_p_iter_normal_range_unchanged():
+    fs = FailureSchedule(rate_per_hour=0.10, iteration_time_s=91.3,
+                         num_stages=6, steps=50, seed=1)
+    np.testing.assert_allclose(fs.p_iter, 0.10 * 91.3 / 3600.0)
+    assert 0.0 <= fs.p_iter <= 1.0

@@ -1,0 +1,230 @@
+"""Tests for the first-class RecoveryStrategy API: registry round-trip,
+capability-flag-driven behavior, checkpoint restart-from-init, and the
+adaptive (Chameleon-style) policy-switching strategy."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import (ModelConfig, OptimizerConfig, RecoveryConfig,
+                          TrainConfig)
+from repro.core.state import History, TrainState
+from repro.core.stages import StagePartition
+from repro.core.trainer import Trainer
+from repro.core.walltime import WallClockModel
+from repro.data.pipeline import make_batches
+from repro.models.model import build_model
+from repro.optim.adam import init_adam
+from repro.recovery import (FailureContext, RecoveryStrategy,
+                            available_strategies, get_strategy_cls,
+                            make_strategy, register_strategy)
+
+CFG = ModelConfig(
+    name="api-llama", arch_type="dense", num_layers=4, d_model=32,
+    num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=128, max_seq_len=32,
+    dtype="float32", param_dtype="float32")
+STAGES = 4
+
+
+class ForcedSchedule:
+    def __init__(self, events):
+        self._events = dict(events)
+
+    def at(self, step):
+        return self._events.get(step, [])
+
+
+def make_trainer(rcfg, steps=8, events=None):
+    tcfg = TrainConfig(global_batch=4, microbatch=4, seq_len=32, steps=steps,
+                       eval_every=100,
+                       optimizer=OptimizerConfig(lr=1e-3, total_steps=steps,
+                                                 warmup_steps=2),
+                       recovery=rcfg)
+    sched = ForcedSchedule(events) if events else None
+    return Trainer(build_model(CFG), tcfg, schedule=sched)
+
+
+def batches():
+    return make_batches(CFG, batch=4, seq=32, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_round_trip():
+    """Every config-selectable name resolves to a strategy of that name."""
+    names = available_strategies()
+    for required in ("checkfree", "checkfree_plus", "checkpoint", "redundant",
+                     "none", "copy", "uniform", "random", "adaptive"):
+        assert required in names
+    for name in names:
+        s = make_strategy(RecoveryConfig(strategy=name))
+        assert isinstance(s, RecoveryStrategy)
+        assert s.name == name
+        assert s.iteration_cost() > 0
+        assert s.failure_cost() >= 0
+
+
+def test_registry_unknown_name_raises():
+    with pytest.raises(KeyError, match="no_such_policy"):
+        make_strategy(RecoveryConfig(strategy="no_such_policy"))
+
+
+def test_trainer_constructs_strategy_from_config(tmp_path):
+    rcfg = RecoveryConfig(strategy="redundant", num_stages=STAGES,
+                          checkpoint_dir=str(tmp_path / "ck"))
+    tr = make_trainer(rcfg)
+    assert tr.strategy.name == "redundant"
+    assert isinstance(tr.strategy, get_strategy_cls("redundant"))
+
+
+def test_custom_plugin_registration():
+    @register_strategy("unit_custom")
+    class UnitCustom(RecoveryStrategy):
+        def failure_cost(self):
+            return 123.0
+
+    s = make_strategy(RecoveryConfig(strategy="unit_custom"))
+    assert s.failure_cost() == 123.0
+    # duplicate name with a different class is rejected
+    with pytest.raises(ValueError, match="unit_custom"):
+        @register_strategy("unit_custom")
+        class Other(RecoveryStrategy):
+            pass
+
+
+def test_walltime_legacy_shim_delegates_to_registry():
+    w = WallClockModel()
+    assert w.iteration_cost("adaptive") == w.iteration_cost("checkfree")
+    with pytest.raises(KeyError):
+        w.iteration_cost("no_such_policy")
+
+
+# ---------------------------------------------------------------------------
+# capability flags
+# ---------------------------------------------------------------------------
+
+def test_capability_flags():
+    cf = get_strategy_cls("checkfree")
+    cfp = get_strategy_cls("checkfree_plus")
+    assert not cf.handles_edge_stages and cfp.handles_edge_stages
+    assert cf.handles_consecutive and cfp.handles_consecutive
+    assert not cf.uses_swap_schedule and cfp.uses_swap_schedule
+    assert not get_strategy_cls("checkpoint").handles_consecutive
+    assert not get_strategy_cls("copy").uses_swap_schedule
+
+
+def test_checkfree_edge_failure_degrades_per_flag():
+    """Plain CheckFree cannot merge an edge stage: per its
+    handles_edge_stages=False flag it degrades to copying the neighbour."""
+    model = build_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    part = StagePartition(CFG, STAGES)
+    s = make_strategy(RecoveryConfig(strategy="checkfree",
+                                     num_stages=STAGES)).bind(part)
+    state = TrainState(params, init_adam(params),
+                       omegas=np.ones((STAGES,), np.float32))
+    hist = History()
+    ev = FailureContext(stage=0, wall_step=0, key=jax.random.PRNGKey(1),
+                        hist=hist)
+    out = s.on_failure(state, ev)
+    got = jax.tree.leaves(part.get_stage(out.params, 0))
+    src = jax.tree.leaves(part.get_stage(params, 1))
+    assert all(bool((a == b).all()) for a, b in zip(got, src))
+    assert len(hist.recovery_errors) == 1
+
+
+def test_consecutive_flag_drives_trainer_dispatch(tmp_path):
+    """A strategy without handles_consecutive gets per-stage on_failure calls
+    even for an adjacent-stage event (the trainer checks the flag, not the
+    name)."""
+    rcfg = RecoveryConfig(strategy="copy", num_stages=STAGES,
+                          checkpoint_dir=str(tmp_path / "ck"))
+    tr = make_trainer(rcfg, steps=6, events={3: [1, 2]})
+    assert not tr.strategy.handles_consecutive
+    state, hist = tr.run(batches())
+    assert state.effective_step == 6
+    assert len(hist.failures) == 2
+    assert len(hist.recovery_errors) == 2
+    assert all(e > 0 for _, e in hist.recovery_errors)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint restart-from-init (the fixed bug)
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_restart_from_init_resets_state(tmp_path):
+    """A failure before the first save must reset params/opt to a fresh init
+    and effective_step to 0 (previously the state leaked through unchanged)."""
+    rcfg = RecoveryConfig(strategy="checkpoint", num_stages=STAGES,
+                          checkpoint_every=100,
+                          checkpoint_dir=str(tmp_path / "ck"))
+    tr = make_trainer(rcfg, steps=4)
+    init_params = build_model(CFG).init(jax.random.PRNGKey(0))
+    drifted = jax.tree.map(lambda a: a + 1.0, init_params)
+    state = TrainState(drifted, init_adam(drifted), effective_step=3)
+    hist = History()
+    out = tr.strategy.on_failure(
+        state, FailureContext(stage=1, wall_step=3,
+                              key=jax.random.PRNGKey(0), hist=hist))
+    assert out.effective_step == 0
+    for a, b in zip(jax.tree.leaves(out.params),
+                    jax.tree.leaves(init_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert len(hist.recovery_errors) == 1
+
+
+def test_checkpoint_restart_replays_from_zero(tmp_path):
+    """End-to-end: an early failure (no checkpoint yet) costs a full replay —
+    wall iterations = steps + wall-iters-lost-before-the-restart."""
+    rcfg = RecoveryConfig(strategy="checkpoint", num_stages=STAGES,
+                          checkpoint_every=100,
+                          checkpoint_dir=str(tmp_path / "ck"))
+    tr = make_trainer(rcfg, steps=4, events={1: [1]})
+    state, hist = tr.run(batches())
+    assert state.effective_step == 4
+    assert hist.wall_iters == 5  # one iteration of progress was lost
+    assert np.isnan(hist.recovery_errors[0][1])
+
+
+# ---------------------------------------------------------------------------
+# adaptive strategy (Chameleon-style switching)
+# ---------------------------------------------------------------------------
+
+def test_adaptive_switches_children_on_windowed_rate(tmp_path):
+    rcfg = RecoveryConfig(strategy="adaptive", num_stages=STAGES,
+                          adaptive_window=4, adaptive_threshold=0.3,
+                          checkpoint_every=2,
+                          checkpoint_dir=str(tmp_path / "ck"))
+    tr = make_trainer(rcfg, steps=14, events={1: [1], 2: [2], 3: [1]})
+    strat = tr.strategy
+    assert strat.name == "adaptive"
+    assert strat.active is strat.low
+    state, hist = tr.run(batches())
+    assert state.effective_step == 14
+    assert all(np.isfinite(hist.loss))
+    # the storm trips low -> high; the calm tail drains the window back
+    transitions = [(frm, to) for _, frm, to in strat.switches]
+    assert ("checkfree", "checkpoint") in transitions
+    assert ("checkpoint", "checkfree") in transitions
+    assert strat.active is strat.low  # calm again at the end
+
+
+def test_adaptive_rejects_adaptive_children():
+    with pytest.raises(ValueError):
+        make_strategy(RecoveryConfig(strategy="adaptive",
+                                     adaptive_low="adaptive"))
+
+
+def test_adaptive_costs_follow_active_child(tmp_path):
+    rcfg = RecoveryConfig(strategy="adaptive", adaptive_window=2,
+                          adaptive_threshold=0.4, num_stages=STAGES,
+                          checkpoint_dir=str(tmp_path / "ck"))
+    s = make_strategy(rcfg)
+    assert s.iteration_cost() == s.low.iteration_cost()
+    s.active = s.high
+    assert s.iteration_cost() == s.high.iteration_cost()
+    assert s.failure_cost() == s.high.failure_cost()
