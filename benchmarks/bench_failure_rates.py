@@ -2,6 +2,11 @@
 
 Paper expectation: graceful degradation — validation loss only slightly
 worse when the failure rate is tripled.
+
+The failure environment is the cluster simulator's ``bernoulli`` scenario
+(``repro.sim``), which is bit-identical to the legacy
+``core.failures.FailureSchedule`` for the same (rate, seed) — so this
+figure doubles as a live parity check of the simulator's legacy adapter.
 """
 from __future__ import annotations
 
@@ -11,7 +16,8 @@ RATES = [0.0, 0.05, 0.10, 0.16]
 
 
 def run(steps: int = FAST_STEPS, verbose: bool = False):
-    recs = {r: run_strategy(strategy="checkfree_plus", rate=r, steps=steps,
+    recs = {r: run_strategy(strategy="checkfree_plus", rate=r,
+                            scenario="bernoulli", steps=steps,
                             verbose=verbose) for r in RATES}
     rows = []
     for r, rec in recs.items():

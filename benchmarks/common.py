@@ -30,6 +30,7 @@ from repro.core.trainer import Trainer
 from repro.core.walltime import WallClockModel
 from repro.data.pipeline import SyntheticLM, batch_for, make_batches
 from repro.models.model import build_model
+from repro.sim import get_scenario, simulate
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 CACHE_DIR = os.path.join(RESULTS_DIR, "cache")
@@ -85,18 +86,34 @@ def _cache_key(kw: Dict[str, Any]) -> str:
     return hashlib.sha1(blob).hexdigest()[:16]
 
 
-def run_strategy(*, strategy: str, rate: float = 0.10,
+def run_strategy(*, strategy: str, rate: Optional[float] = None,
+                 scenario: Optional[str] = None,
                  steps: int = FAST_STEPS, seed: int = 0,
                  ckpt_every: int = 50, failure_seed: int = 42,
                  lr: float = 2e-3, use_cache: bool = True,
                  verbose: bool = False) -> Dict[str, Any]:
-    """Train the bench model under ``strategy`` with failures at ``rate``/h.
+    """Train the bench model under ``strategy`` with failures at ``rate``/h
+    (default 0.10 on the legacy schedule).
+
+    With ``scenario`` the failure environment comes from the cluster
+    simulator (``repro.sim``) instead of the legacy Bernoulli schedule:
+    pass any registered scenario name or ``trace:<file>``.  The scenario's
+    own rate/iteration-time stand unless ``rate`` is passed *explicitly*,
+    which overrides them; under ``scenario="bernoulli"`` the simulated run
+    is bit-identical to the legacy schedule for the same seed.
 
     Returns a JSON-able record with the History series + derived metrics.
     """
-    kw = dict(strategy=strategy, rate=rate, steps=steps, seed=seed,
-              ckpt_every=ckpt_every, failure_seed=failure_seed, lr=lr,
-              model=BENCH_MODEL.name, stages=BENCH_STAGES, v=5)
+    if scenario is None and rate is None:
+        rate = 0.10  # the legacy schedule's long-standing default
+    kw = dict(strategy=strategy, rate=rate, scenario=scenario, steps=steps,
+              seed=seed, ckpt_every=ckpt_every, failure_seed=failure_seed,
+              lr=lr, model=BENCH_MODEL.name, stages=BENCH_STAGES, v=6)
+    if scenario is not None and scenario.startswith("trace:"):
+        # key the cache on the trace *contents*: editing the file must miss
+        from repro.sim import resolve_trace_path
+        with open(resolve_trace_path(scenario[len("trace:"):]), "rb") as f:
+            kw["trace_sha"] = hashlib.sha1(f.read()).hexdigest()[:12]
     os.makedirs(CACHE_DIR, exist_ok=True)
     path = os.path.join(CACHE_DIR, _cache_key(kw) + ".json")
     if use_cache and os.path.exists(path):
@@ -104,16 +121,23 @@ def run_strategy(*, strategy: str, rate: float = 0.10,
             return json.load(f)
 
     wall = WallClockModel(model_bytes=4 * BENCH_MODEL.param_count() * 2)
-    # paper protocol: edge stages are protected for every policy without
-    # swap-trained twins (only CheckFree+'s swap schedule makes them losable)
-    from repro.recovery import get_strategy_cls, make_strategy
-    protect = not get_strategy_cls(strategy).uses_swap_schedule
+    from repro.recovery import default_protect_edges, make_strategy
+    protect = default_protect_edges(strategy)
+    sc = None
+    if scenario is not None:
+        overrides: Dict[str, Any] = dict(num_stages=BENCH_STAGES,
+                                         protect_edges=protect)
+        if rate is not None:
+            overrides.update(rate_per_hour=rate,
+                             iteration_time_s=SCHEDULE_ITER_TIME_S)
+        sc = get_scenario(scenario, **overrides)
+    eff_rate = sc.rate_per_hour if sc is not None else (rate or 0.0)
     rcfg = RecoveryConfig(
         strategy=strategy, num_stages=BENCH_STAGES,
         checkpoint_every=ckpt_every,
         checkpoint_dir=os.path.join("/tmp/repro_bench_ckpt",
                                     _cache_key(kw)),
-        failure_rate_per_hour=rate, seed=failure_seed,
+        failure_rate_per_hour=eff_rate, seed=failure_seed,
         protect_edge_stages=protect)
     tcfg = TrainConfig(
         global_batch=BENCH_BATCH, microbatch=BENCH_BATCH, seq_len=BENCH_SEQ,
@@ -122,7 +146,10 @@ def run_strategy(*, strategy: str, rate: float = 0.10,
         recovery=rcfg)
     # failure schedule over wall iterations (same seed across strategies)
     schedule = None
-    if rate > 0:
+    if sc is not None:
+        schedule = simulate(sc, steps=steps * 10, seed=failure_seed,
+                            wall=wall)
+    elif rate:
         schedule = FailureSchedule(
             rate_per_hour=rate, iteration_time_s=SCHEDULE_ITER_TIME_S,
             num_stages=BENCH_STAGES, steps=steps * 10, seed=failure_seed,
@@ -145,6 +172,7 @@ def run_strategy(*, strategy: str, rate: float = 0.10,
         steps=hist.steps, wall_time=hist.wall_time, loss=hist.loss,
         eval_loss=hist.eval_loss, failures=hist.failures,
         recovery_errors=hist.recovery_errors, wall_iters=hist.wall_iters,
+        truncated=hist.truncated,
         # seed-independent per-iteration cost: a fresh strategy (adaptive
         # starts in its calm/low mode, so this never depends on where a
         # particular run's sliding window happened to end)

@@ -24,6 +24,8 @@ BENCHES = {
     "fig5b": ("swap overhead", "benchmarks.bench_swap_overhead"),
     "table3": ("held-out eval", "benchmarks.bench_eval"),
     "sec44": ("recovery-error bound term", "benchmarks.bench_recovery_error"),
+    "scenarios": ("simulated-cluster scenario sweep",
+                  "benchmarks.bench_scenarios"),
     "roofline": ("dry-run roofline report", "benchmarks.roofline"),
 }
 

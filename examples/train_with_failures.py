@@ -30,10 +30,8 @@ DEFAULT_STRATEGIES = ["checkfree", "checkfree_plus", "checkpoint",
 
 def run(strategy: str, cfg, stages: int, steps: int, rate: float,
         seq: int, batch: int):
-    # paper protocol: edge stages are protected for every policy without
-    # swap-trained twins (only CheckFree+'s swap schedule makes them losable)
-    from repro.recovery import get_strategy_cls
-    protect = not get_strategy_cls(strategy).uses_swap_schedule
+    from repro.recovery import default_protect_edges
+    protect = default_protect_edges(strategy)
     rcfg = RecoveryConfig(strategy=strategy, num_stages=stages,
                           failure_rate_per_hour=rate,
                           protect_edge_stages=protect)

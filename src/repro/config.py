@@ -223,6 +223,12 @@ class RecoveryConfig:
     checkpoint_dir: str = "/tmp/repro_ckpt"
     failure_rate_per_hour: float = 0.10   # per-stage failure probability / hour
     iteration_time_s: float = 91.3        # paper Table 2 medium-model iteration
+    scenario: str = ""                # simulated-cluster environment: any name
+                                      # in repro.sim's scenario registry or
+                                      # trace:<file>; when set (and no explicit
+                                      # schedule is passed) the Trainer builds
+                                      # its failure schedule + per-event
+                                      # wall-clock from the simulator
     seed: int = 0
     protect_edge_stages: bool = True  # CheckFree (not +) cannot lose S_first/S_last
     # --- adaptive (strategy="adaptive"): Chameleon-style policy switching ---

@@ -7,9 +7,19 @@ iterations, so that the failure patterns between tests are the same").
 We reproduce that: a :class:`FailureSchedule` is derived once from
 (rate, iteration_time, num_stages, seed) and consumed by every strategy.
 
-Constraints honoured (paper §3): no two *consecutive* stages fail at once;
-stage 0 (embedding stage) never fails; optionally the first/last transformer
-stages are protected (CheckFree without '+').
+Constraints honoured (paper §3): no two *consecutive* stages fail at once,
+and with ``protect_edges=True`` the first/last transformer stages never fail
+(plain CheckFree cannot recover them; only CheckFree+'s swap schedule makes
+them losable, so ``protect_edges=False`` lets every tower stage fail,
+including stage 0).  Stage indices are 0-based *within the transformer
+tower*: the embedding stage (the paper's S0) sits outside this index space
+entirely and is never simulated as failing.
+
+This schedule is the homogeneous-cluster baseline; ``repro.sim`` generates
+richer environments (heterogeneous nodes, bursty/diurnal/trace-replay
+churn, node-dependent wall-clock) behind the same ``.at(step)`` /
+``.events`` contract, and its ``bernoulli`` scenario is bit-identical to
+this class for matched (rate, iteration_time, num_stages, seed).
 """
 from __future__ import annotations
 

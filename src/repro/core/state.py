@@ -31,3 +31,5 @@ class History:
     failures: List[Tuple[int, int]] = field(default_factory=list)
     recovery_errors: List[Tuple[int, float]] = field(default_factory=list)
     wall_iters: int = 0
+    truncated: bool = False      # hit the trainer's max_wall safety bound
+                                 # before reaching the target step count

@@ -10,10 +10,18 @@ The loop itself is strategy-agnostic: it only consults the strategy's
 lifecycle hooks and capability flags, never its name.  CheckFree+'s
 out-of-order microbatches are realized by computing half the batch through a
 swapped stage order (a static layer-index gather — see core/swap.py).
+
+The ``schedule`` may be the legacy seeded :class:`FailureSchedule` or a
+simulated cluster's ``SimFailureSchedule`` (``repro.sim``): when the
+schedule exposes the per-event wall-clock hooks (``iteration_factor`` /
+``failure_overhead``) the loop prices iterations and recoveries with
+node-dependent costs, and when it exposes ``observed_rate`` the strategy
+receives the cluster's failure-rate telemetry each wall iteration.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -101,6 +109,12 @@ class Trainer:
         self.part = StagePartition(model.cfg, self.rcfg.num_stages)
         self.strategy: RecoveryStrategy = make_strategy(self.rcfg, wall=wall)
         self.wall = self.strategy.wall
+        if schedule is None and self.rcfg.scenario:
+            from repro.sim import simulate  # deferred: core stays sim-free
+            schedule = simulate(
+                self.rcfg.scenario, steps=tcfg.steps * 10,
+                seed=self.rcfg.seed, num_stages=self.rcfg.num_stages,
+                protect_edges=self.rcfg.protect_edge_stages, wall=self.wall)
         self.schedule = schedule
 
         def fresh_init():
@@ -131,9 +145,22 @@ class Trainer:
                 data_cache[len(data_cache)] = next(batches)
             return data_cache[step]
 
+        # per-event wall-clock hooks: a simulated cluster (repro.sim)
+        # stretches iterations by its slowest node and adds node-dependent
+        # recovery overheads; the legacy FailureSchedule has neither, so the
+        # constant per-strategy pricing stands unchanged
+        iter_factor = getattr(self.schedule, "iteration_factor", None)
+        failure_overhead = getattr(self.schedule, "failure_overhead", None)
+        observed_rate = getattr(self.schedule, "observed_rate", None)
+
         wall_step = 0
         max_wall = tcfg.steps * 10  # safety bound for rollback-heavy runs
         while state.effective_step < tcfg.steps and wall_step < max_wall:
+            # 0) environment telemetry (the simulator's observed failure
+            #    rate) reaches the strategy before this iteration's events
+            if observed_rate is not None:
+                strategy.observe_environment(observed_rate(wall_step))
+
             # 1) failures arrive at iteration boundaries; consecutive-stage
             #    runs (beyond-paper, §6 future work) are recovered together
             #    when the strategy advertises the capability
@@ -158,6 +185,8 @@ class Trainer:
                     for stage in run:
                         hist.failures.append((wall_step, stage))
                         clock += strategy.failure_cost()
+                        if failure_overhead is not None:
+                            clock += failure_overhead(wall_step, stage)
 
             # 2) one training iteration
             batch = batch_at(state.effective_step)
@@ -169,7 +198,8 @@ class Trainer:
             state = TrainState(params, opt_state, new_scale,
                                np.asarray(omegas),
                                state.effective_step + 1)
-            clock += strategy.iteration_cost()
+            clock += strategy.iteration_cost() * (
+                iter_factor(wall_step) if iter_factor is not None else 1.0)
 
             # 3) strategy bookkeeping (checkpoint saves, adaptive windows...)
             strategy.after_step(state, hist)
@@ -191,4 +221,13 @@ class Trainer:
             wall_step += 1
 
         hist.wall_iters = wall_step
+        if state.effective_step < tcfg.steps:
+            # the max_wall safety bound fired: the run is NOT converged, and
+            # rollback-heavy sweeps must not masquerade as such
+            hist.truncated = True
+            warnings.warn(
+                f"Trainer.run truncated at max_wall={max_wall} wall "
+                f"iterations (effective_step={state.effective_step}/"
+                f"{tcfg.steps}); results are incomplete", RuntimeWarning,
+                stacklevel=2)
         return state, hist

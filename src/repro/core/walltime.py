@@ -13,6 +13,12 @@ lives on each :class:`~repro.recovery.base.RecoveryStrategy`
 (``iteration_cost`` / ``failure_cost``).  The string-keyed methods below are
 a legacy shim that delegates to the registry, kept for benchmarks and tests
 that price a policy without building a trainer.
+
+These constants are the *homogeneous-cluster* baseline.  When the trainer
+is driven by a simulated cluster (``repro.sim``), the schedule additionally
+stretches iterations by the slowest active node and adds per-event
+node-dependent recovery overheads (restart latency, state transfer over the
+replacement node's bandwidth) on top of the per-strategy costs.
 """
 from __future__ import annotations
 
@@ -31,6 +37,12 @@ class WallClockModel:
 
     def ckpt_save_time_s(self) -> float:
         return self.model_bytes / self.ckpt_bandwidth_Bps
+
+    def stage_bytes(self, num_stages: int) -> float:
+        """Serialized bytes of one pipeline stage (model+opt split evenly);
+        the cluster simulator prices recovery transfers with this against
+        each replacement node's bandwidth."""
+        return self.model_bytes / max(num_stages, 1)
 
     # ---- legacy string-dispatch shim (delegates to the registry) --------
     def _strategy(self, name: str, ckpt_every: int = 100):

@@ -3,6 +3,8 @@
     PYTHONPATH=src python -m repro.launch.train \
         --arch paper-llama-124m --strategy checkfree_plus \
         --steps 300 --rate 0.10 [--reduced] [--seq 512 --batch 8]
+    PYTHONPATH=src python -m repro.launch.train \
+        --strategy adaptive --scenario spot_diurnal --reduced   # repro.sim
 
 ``--arch`` accepts any assigned architecture id or the paper's own models
 (paper-llama-{124m,500m,1.5b}).  ``--reduced`` swaps in the CPU-sized smoke
@@ -36,6 +38,10 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--rate", type=float, default=0.10,
                     help="hourly per-stage failure probability")
+    ap.add_argument("--scenario", default="",
+                    help="simulated-cluster environment (repro.sim): a "
+                         "registered scenario name or trace:<file>; "
+                         "supersedes --rate's Bernoulli schedule")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=0,
                     help="0 -> the config's max_seq_len (capped at 512)")
@@ -59,14 +65,12 @@ def main() -> None:
     seq = args.seq or min(cfg.max_seq_len, 512)
     lr = args.lr or 3e-4
 
-    # paper protocol: edge stages are protected for every policy without
-    # swap-trained twins (only CheckFree+'s swap schedule makes them losable)
-    from repro.recovery import get_strategy_cls
-    protect = not get_strategy_cls(args.strategy).uses_swap_schedule
+    from repro.recovery import default_protect_edges
+    protect = default_protect_edges(args.strategy)
     rcfg = RecoveryConfig(
         strategy=args.strategy, num_stages=stages,
-        failure_rate_per_hour=args.rate, seed=args.seed,
-        protect_edge_stages=protect)
+        failure_rate_per_hour=args.rate, scenario=args.scenario,
+        seed=args.seed, protect_edge_stages=protect)
     tcfg = TrainConfig(
         global_batch=args.batch, microbatch=args.batch, seq_len=seq,
         steps=args.steps, eval_every=max(args.steps // 10, 1),
@@ -81,7 +85,9 @@ def main() -> None:
           f"seq={seq} batch={args.batch}")
 
     schedule = None
-    if args.rate > 0 and args.strategy != "none":
+    if args.scenario:
+        pass  # the Trainer builds it from rcfg.scenario (repro.sim)
+    elif args.rate > 0 and args.strategy != "none":
         schedule = FailureSchedule(
             rate_per_hour=args.rate, iteration_time_s=rcfg.iteration_time_s,
             num_stages=stages, steps=args.steps * 10, seed=args.seed,
@@ -97,6 +103,8 @@ def main() -> None:
 
     trainer = Trainer(model, tcfg, wall=WallClockModel(
         model_bytes=4 * n * 2), schedule=schedule)
+    if args.scenario and trainer.schedule is not None:
+        print(trainer.schedule.summary())
     state, hist = trainer.run(batches, evals, verbose=not args.quiet)
 
     print(f"\ndone: {state.effective_step} effective steps over "

@@ -11,8 +11,8 @@ of writing a custom strategy.
 from repro.recovery.base import (FailureContext,  # noqa: F401
                                  RecoveryStrategy)
 from repro.recovery.registry import (available_strategies,  # noqa: F401
-                                     get_strategy_cls, make_strategy,
-                                     register_strategy)
+                                     default_protect_edges, get_strategy_cls,
+                                     make_strategy, register_strategy)
 
 # import for registration side effects: the built-in policies
 from repro.recovery import strategies as _strategies  # noqa: F401,E402

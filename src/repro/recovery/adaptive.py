@@ -8,6 +8,13 @@ calm periods (default CheckFree) and a conservative one for stormy periods
 (failures per iteration); when it crosses ``adaptive_threshold`` the active
 policy switches to ``adaptive_high``, and back once the window drains.
 
+When the trainer is driven by a simulated cluster (``repro.sim``), the
+cluster's own observed failure rate arrives through
+:meth:`observe_environment` and takes precedence over the local window —
+the policy reacts to what the environment monitor reports (Chameleon
+selects policies from observed real-time failure dynamics) rather than
+only to the failures it happened to absorb itself.
+
 The high child's ``after_step`` bookkeeping runs even while the low policy is
 active ("shadow checkpointing"), so a switch under fire has warm state to
 roll back to; the wall-clock model only charges the active child's iteration
@@ -41,6 +48,7 @@ class Adaptive(RecoveryStrategy):
         self.active = self.low
         self._window = deque(maxlen=max(rcfg.adaptive_window, 1))
         self._pending = 0          # failures since the last wall iteration
+        self._env_rate = None      # cluster telemetry (observe_environment)
         # (effective_step, from, to) switch log — inspectable by benchmarks
         self.switches: List[Tuple[int, str, str]] = []
 
@@ -72,8 +80,16 @@ class Adaptive(RecoveryStrategy):
         return self
 
     # ---- lifecycle ----------------------------------------------------
+    def observe_environment(self, rate: float) -> None:
+        """Cluster telemetry: the simulator's observed failure rate
+        supersedes the strategy's own sliding window while it flows."""
+        self._env_rate = float(rate)
+
     def failure_rate(self) -> float:
-        """Empirical failures per wall iteration over the sliding window."""
+        """Failures per wall iteration: the environment's observed rate when
+        a cluster monitor provides one, else the local sliding window."""
+        if self._env_rate is not None:
+            return self._env_rate
         if not self._window:
             return 0.0
         return sum(self._window) / len(self._window)

@@ -13,6 +13,9 @@ lifecycle hooks (called by the trainer)
                                       together (only if ``handles_consecutive``)
   ``after_step(state, hist)``       — bookkeeping after every wall iteration
                                       (checkpoint saves, window statistics)
+  ``observe_environment(rate)``     — cluster telemetry: the simulator's
+                                      observed failure rate, fed once per
+                                      wall iteration when available
 
 wall-clock model (absorbing ``WallClockModel``'s per-strategy dispatch)
   ``iteration_cost()``  — modelled seconds per wall iteration
@@ -98,6 +101,12 @@ class RecoveryStrategy:
 
     def after_step(self, state: "TrainState", hist: "History") -> None:
         pass
+
+    def observe_environment(self, rate: float) -> None:
+        """Environment telemetry: the cluster's observed failure rate
+        (failures per wall iteration).  Called by the trainer once per wall
+        iteration when the failure schedule exposes ``observed_rate`` (the
+        simulator's adapter does); default is to ignore it."""
 
     # ---- wall-clock model --------------------------------------------
     def iteration_cost(self) -> float:

@@ -39,6 +39,14 @@ def available_strategies() -> List[str]:
     return sorted(_REGISTRY)
 
 
+def default_protect_edges(name: str) -> bool:
+    """The paper's protocol: edge stages are protected for every policy
+    without swap-trained twins — only CheckFree+'s swap schedule makes
+    S_first/S_last losable.  Every launcher derives its
+    ``protect_edge_stages`` default from this."""
+    return not get_strategy_cls(name).uses_swap_schedule
+
+
 def get_strategy_cls(name: str) -> Type[RecoveryStrategy]:
     try:
         return _REGISTRY[name]

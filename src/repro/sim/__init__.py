@@ -1,0 +1,27 @@
+"""Event-driven cluster churn simulator.
+
+The paper's setting is transient node churn on decentralized/spot
+clusters; this package simulates that environment so recovery policies can
+be priced against realistic failure dynamics instead of a single
+per-iteration coin.  See ``docs/simulator.md``.
+
+    from repro.sim import simulate
+
+    schedule = simulate("spot_diurnal", steps=4000, seed=42)
+    trainer = Trainer(model, tcfg, schedule=schedule)
+
+``simulate`` returns a :class:`SimFailureSchedule` — drop-in compatible
+with :class:`repro.core.failures.FailureSchedule` (bit-identical under the
+``bernoulli`` scenario for matched parameters) and additionally a
+per-event wall-clock source the trainer consumes when present.
+"""
+from repro.sim.adapters import SimFailureSchedule, simulate  # noqa: F401
+from repro.sim.cluster import Cluster, SimResult  # noqa: F401
+from repro.sim.node import Node  # noqa: F401
+from repro.sim.processes import (FailureProcess,  # noqa: F401
+                                 HazardProcess, available_processes,
+                                 load_trace, make_process,
+                                 register_process)
+from repro.sim.scenario import (ScenarioConfig,  # noqa: F401
+                                available_scenarios, get_scenario,
+                                register_scenario, resolve_trace_path)

@@ -1,0 +1,121 @@
+"""Adapters: how the rest of the stack consumes a simulated cluster.
+
+:class:`SimFailureSchedule` wraps a :class:`~repro.sim.cluster.SimResult`
+behind the legacy :class:`repro.core.failures.FailureSchedule` contract
+(``.events`` / ``.at(step)`` / ``len`` / ``summary``), so ``Trainer`` and
+every benchmark accept it unchanged — and it adds the three per-event
+wall-clock hooks the trainer upgrades to when present:
+
+``iteration_factor(step)``
+    multiplier on the strategy's ``iteration_cost()`` for that wall
+    iteration (slow/spare hosts stretch the pipeline);
+``failure_overhead(step, stage)``
+    extra modelled seconds for that failure event (replacement-node restart
+    latency + shipping one stage of state over its bandwidth), charged on
+    top of the strategy's ``failure_cost()``;
+``observed_rate(step)``
+    the cluster's trailing-window failures-per-iteration — the environment
+    signal the ``adaptive`` strategy switches on instead of only its own
+    window.
+
+:func:`simulate` is the one-call entry point:
+
+    schedule = simulate("spot_diurnal", steps=4000, seed=42)
+    Trainer(model, tcfg, schedule=schedule).run(batches)
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Union
+
+import numpy as np
+
+from repro.core.walltime import WallClockModel
+from repro.sim.cluster import Cluster, SimResult
+from repro.sim.scenario import ScenarioConfig, get_scenario
+
+
+class SimFailureSchedule:
+    """Legacy-schedule view of a simulated run, plus wall-clock hooks."""
+
+    def __init__(self, result: SimResult, rate_window: int = 32):
+        self.result = result
+        self.events = result.events
+        self.steps = result.steps
+        self.num_stages = result.num_stages
+        self.rate = result.scenario.rate_per_hour
+        self.iter_time = result.scenario.iteration_time_s
+        self._by_step = {}
+        for e in self.events:
+            self._by_step.setdefault(e.step, []).append(e.stage)
+        self.rate_window = max(rate_window, 1)
+        counts = np.zeros(result.steps + 1, np.float64)
+        for e in self.events:
+            counts[e.step + 1] += 1
+        self._cum_failures = np.cumsum(counts)
+
+    # ---- the legacy FailureSchedule contract -------------------------
+    def at(self, step: int) -> List[int]:
+        return self._by_step.get(step, [])
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def summary(self) -> str:
+        r = self.result
+        return (f"{len(self.events)} stage failures over {r.steps} iters "
+                f"({r.total_hours:.1f} simulated h, "
+                f"scenario={r.scenario.name!r}, seed={r.seed})")
+
+    # ---- per-event wall-clock source ---------------------------------
+    def iteration_factor(self, step: int) -> float:
+        """Iteration-time multiplier at ``step`` (slowest active host)."""
+        if 0 <= step < len(self.result.iter_factors):
+            return float(self.result.iter_factors[step])
+        return 1.0
+
+    def failure_overhead(self, step: int, stage: int) -> float:
+        """Node-dependent extra seconds for the failure at (step, stage)."""
+        return self.result.overheads.get((step, stage), 0.0)
+
+    # ---- environment signal ------------------------------------------
+    def observed_rate(self, step: int) -> float:
+        """Failures per wall iteration over the trailing window at
+        ``step`` (what a cluster-side monitor would report)."""
+        if step <= 0:
+            return 0.0
+        hi = min(step, self.steps)
+        lo = max(hi - self.rate_window, 0)
+        if hi == lo:
+            return 0.0
+        return float((self._cum_failures[hi] - self._cum_failures[lo])
+                     / (hi - lo))
+
+    def __repr__(self) -> str:
+        return f"SimFailureSchedule({self.summary()})"
+
+
+def simulate(scenario: Union[str, ScenarioConfig], *, steps: int,
+             seed: int = 0, num_stages: Optional[int] = None,
+             protect_edges: Optional[bool] = None,
+             wall: Optional[WallClockModel] = None,
+             rate_window: int = 32) -> SimFailureSchedule:
+    """Run the cluster simulator and return its trainer-ready schedule view.
+
+    ``num_stages`` / ``protect_edges`` override the scenario (they are
+    model/strategy properties, not environment properties); ``wall``
+    supplies the per-stage state size that prices recovery transfers.
+    """
+    if isinstance(scenario, str):
+        scenario = get_scenario(scenario)
+    overrides = {}
+    if num_stages is not None:
+        overrides["num_stages"] = num_stages
+    if protect_edges is not None:
+        overrides["protect_edges"] = protect_edges
+    if overrides:
+        import dataclasses
+        scenario = dataclasses.replace(scenario, **overrides)
+    wall = wall or WallClockModel()
+    cluster = Cluster(scenario, steps=steps, seed=seed,
+                      stage_bytes=wall.stage_bytes(scenario.num_stages))
+    return SimFailureSchedule(cluster.run(), rate_window=rate_window)

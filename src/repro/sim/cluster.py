@@ -1,0 +1,176 @@
+"""The discrete-event cluster loop.
+
+:class:`Cluster` maps pipeline stages onto :class:`~repro.sim.node.Node`
+hosts and advances simulated time one *wall iteration* at a time (the
+trainer consumes failures at iteration boundaries, so iterations are the
+natural event granularity).  Each tick:
+
+1. nodes whose restart finished rejoin their stage (``rejoin`` policy);
+2. the iteration duration is the nominal iteration time stretched by the
+   slowest participating host (stragglers and spare hosts stall the whole
+   pipeline);
+3. the failure process draws candidate stage failures for the elapsed
+   window; the paper's no-two-adjacent-stages constraint is applied in
+   ascending stage order (identical to the legacy schedule);
+4. every accepted failure prices its recovery — restart latency plus
+   shipping one stage of state over the replacement host's bandwidth —
+   and the stage's host is respawned (fresh node, fresh wear-out clock)
+   or sent into restart with a slow spare filling in.
+
+Two RNG streams keep scenarios reproducible *and* the ``bernoulli``
+process bit-compatible with the legacy schedule: the failure process owns
+``default_rng(seed)`` exclusively (consuming exactly what
+``FailureSchedule`` would), while node/infrastructure randomness draws
+from an independent stream.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.failures import FailureEvent
+from repro.sim.node import Node
+from repro.sim.processes import FailureProcess, make_process
+from repro.sim.scenario import ScenarioConfig
+
+
+@dataclass
+class SimResult:
+    """Everything one simulated run produced (wrapped for the trainer by
+    :class:`repro.sim.adapters.SimFailureSchedule`)."""
+
+    scenario: ScenarioConfig
+    steps: int
+    seed: int
+    num_stages: int
+    protect_edges: bool
+    events: List[FailureEvent]
+    # candidate failures the no-two-adjacent-stages constraint suppressed
+    # (nothing disappears silently — trace replays especially)
+    suppressed: List[FailureEvent]
+    # per-event recovery overhead in seconds, keyed by (step, stage)
+    overheads: Dict[Tuple[int, int], float]
+    iter_factors: np.ndarray        # [steps] iteration-time multiplier
+    times_h: np.ndarray             # [steps] sim time at each step start
+    # (kind, step, stage, node_id) with kind in {"fail", "respawn", "rejoin"}
+    node_log: List[Tuple[str, int, int, int]] = field(default_factory=list)
+
+    @property
+    def total_hours(self) -> float:
+        if not len(self.times_h):
+            return 0.0
+        last_dt = self.scenario.iteration_time_s * self.iter_factors[-1] / 3600
+        return float(self.times_h[-1] + last_dt)
+
+
+class Cluster:
+    """Stages -> nodes with churn; ``run()`` executes the event loop."""
+
+    def __init__(self, scenario: ScenarioConfig, *, steps: int, seed: int = 0,
+                 stage_bytes: float = 0.0):
+        scenario.validate()
+        self.sc = scenario
+        self.steps = steps
+        self.seed = seed
+        self.stage_bytes = stage_bytes
+        # process stream == legacy stream (bernoulli bit-parity); node and
+        # infrastructure randomness must not touch it
+        self.process: FailureProcess = make_process(
+            scenario, np.random.default_rng(seed))
+        self._infra_rng = np.random.default_rng([seed, 0xC7])
+        self._next_id = 0
+        self.nodes: Dict[int, Node] = {
+            s: self._fresh_node(0.0) for s in range(scenario.num_stages)}
+        # rejoin policy: stage -> (original node, sim time it comes back)
+        self._restarting: Dict[int, Tuple[Node, float]] = {}
+
+    def _fresh_node(self, t_h: float) -> Node:
+        sc = self.sc
+        slowdown = (sc.slow_factor
+                    if self._infra_rng.random() < sc.slow_fraction else 1.0)
+        node = Node(node_id=self._next_id, slowdown=slowdown,
+                    mtbf_hours=1.0 / max(sc.rate_per_hour, 1e-9),
+                    restart_latency_s=sc.restart_latency_s,
+                    bandwidth_Bps=sc.bandwidth_Bps, joined_h=t_h)
+        self._next_id += 1
+        return node
+
+    def _effective_slowdown(self, stage: int) -> float:
+        # a stage whose host is restarting runs on a shared spare that
+        # stalls the pipeline at spare_penalty x nominal speed
+        if stage in self._restarting:
+            return self.sc.spare_penalty
+        return self.nodes[stage].slowdown
+
+    def run(self) -> SimResult:
+        sc = self.sc
+        lo = 1 if sc.protect_edges else 0
+        hi = sc.num_stages - 1 if sc.protect_edges else sc.num_stages
+        candidates = list(range(lo, hi))
+        node_at = self.nodes.__getitem__
+
+        events: List[FailureEvent] = []
+        suppressed: List[FailureEvent] = []
+        overheads: Dict[Tuple[int, int], float] = {}
+        factors = np.ones(self.steps, np.float64)
+        times = np.zeros(self.steps, np.float64)
+        log = []
+
+        t_h = 0.0
+        for step in range(self.steps):
+            # 1) finished restarts rejoin their stage
+            for stage, (node, ready_h) in list(self._restarting.items()):
+                if t_h >= ready_h:
+                    node.joined_h = t_h
+                    self.nodes[stage] = node
+                    del self._restarting[stage]
+                    log.append(("rejoin", step, stage, node.node_id))
+
+            # 2) this iteration runs at the slowest participant's pace
+            factor = max(self._effective_slowdown(s)
+                         for s in range(sc.num_stages))
+            dt_h = sc.iteration_time_s * factor / 3600.0
+            factors[step] = factor
+            times[step] = t_h
+
+            # 3) candidate failures over the elapsed window; adjacency
+            #    constraint applied in ascending stage order (paper §3)
+            accepted: List[int] = []
+            for stage in self.process.failed_stages(
+                    step, t_h, dt_h, candidates, node_at):
+                if any(abs(stage - a) <= 1 for a in accepted):
+                    suppressed.append(FailureEvent(step, stage))
+                    continue
+                accepted.append(stage)
+
+            # 4) price and apply each failure
+            for stage in accepted:
+                dead = self.nodes[stage]
+                events.append(FailureEvent(step, stage))
+                log.append(("fail", step, stage, dead.node_id))
+                if sc.rejoin == "rejoin":
+                    # the node itself comes back after its restart latency;
+                    # until then a spare stalls the pipeline (priced through
+                    # iter_factors), so only the state transfer is charged
+                    overheads[(step, stage)] = dead.transfer_time_s(
+                        self.stage_bytes)
+                    ready = t_h + dt_h + dead.restart_latency_s / 3600.0
+                    self._restarting[stage] = (dead, ready)
+                else:  # respawn: a fresh node replaces it immediately
+                    new = self._fresh_node(t_h)
+                    overheads[(step, stage)] = (
+                        new.restart_latency_s
+                        + new.transfer_time_s(self.stage_bytes))
+                    self.nodes[stage] = new
+                    log.append(("respawn", step, stage, new.node_id))
+
+            t_h += dt_h
+
+        return SimResult(scenario=sc, steps=self.steps, seed=self.seed,
+                         num_stages=sc.num_stages,
+                         protect_edges=sc.protect_edges,
+                         events=events, suppressed=suppressed,
+                         overheads=overheads,
+                         iter_factors=factors, times_h=times, node_log=log)

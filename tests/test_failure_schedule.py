@@ -1,5 +1,6 @@
-"""FailureSchedule probability clamping: extreme rate x iteration-time
-products must stay valid probabilities (satellite of the recovery-API PR)."""
+"""FailureSchedule contracts: probability clamping (extreme rate x
+iteration-time products must stay valid probabilities) and the documented
+stage-index / edge-protection semantics."""
 import numpy as np
 
 from repro.core.failures import FailureSchedule
@@ -26,3 +27,32 @@ def test_p_iter_normal_range_unchanged():
                          num_stages=6, steps=50, seed=1)
     np.testing.assert_allclose(fs.p_iter, 0.10 * 91.3 / 3600.0)
     assert 0.0 <= fs.p_iter <= 1.0
+
+
+# The docstring contract: stage indices are 0-based within the transformer
+# tower (the embedding stage is outside this index space and never fails);
+# protect_edges guards the first/last *tower* stages, and without it every
+# tower stage — including stage 0 — is fair game.
+
+def test_protect_edges_guards_first_and_last_tower_stages():
+    fs = FailureSchedule(rate_per_hour=1e6, iteration_time_s=1e6,  # p == 1
+                         num_stages=5, steps=20, seed=0, protect_edges=True)
+    stages = {e.stage for e in fs.events}
+    assert stages, "p == 1 must produce failures"
+    assert 0 not in stages and 4 not in stages
+    assert stages <= {1, 2, 3}
+
+
+def test_every_tower_stage_can_fail_without_edge_protection():
+    fs = FailureSchedule(rate_per_hour=1e6, iteration_time_s=1e6,  # p == 1
+                         num_stages=5, steps=20, seed=0, protect_edges=False)
+    stages = {e.stage for e in fs.events}
+    assert 0 in stages and 4 in stages
+
+
+def test_no_two_consecutive_stages_fail_together():
+    fs = FailureSchedule(rate_per_hour=1e6, iteration_time_s=1e6,
+                         num_stages=6, steps=30, seed=0, protect_edges=False)
+    for step in range(30):
+        failed = sorted(fs.at(step))
+        assert all(b - a >= 2 for a, b in zip(failed, failed[1:]))

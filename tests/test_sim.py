@@ -1,0 +1,329 @@
+"""Cluster simulator (repro.sim): Bernoulli-adapter parity with the legacy
+FailureSchedule, seeded determinism, trace replay, scenario registry,
+node-dependent wall-clock pricing, and the trainer/adaptive integration."""
+import dataclasses
+import math
+import types
+
+import numpy as np
+import pytest
+
+from repro.config import (ModelConfig, OptimizerConfig, RecoveryConfig,
+                          TrainConfig)
+from repro.core.failures import FailureSchedule
+from repro.core.trainer import Trainer
+from repro.core.walltime import WallClockModel
+from repro.data.pipeline import make_batches
+from repro.models.model import build_model
+from repro.recovery import make_strategy
+from repro.sim import (available_scenarios, get_scenario, load_trace,
+                       resolve_trace_path, simulate)
+
+CFG = ModelConfig(
+    name="sim-llama", arch_type="dense", num_layers=4, d_model=32,
+    num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=128, max_seq_len=32,
+    dtype="float32", param_dtype="float32")
+STAGES = 4
+
+
+# ---------------------------------------------------------------------------
+# Bernoulli-adapter parity (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 42])
+@pytest.mark.parametrize("rate", [0.05, 0.10, 0.16])
+def test_bernoulli_bit_parity_with_legacy_schedule(seed, rate):
+    legacy = FailureSchedule(rate_per_hour=rate, iteration_time_s=300.0,
+                             num_stages=6, steps=1500, seed=seed,
+                             protect_edges=True)
+    sim = simulate(get_scenario("bernoulli", rate_per_hour=rate,
+                                iteration_time_s=300.0),
+                   steps=1500, seed=seed, num_stages=6, protect_edges=True)
+    assert sim.events == legacy.events
+    assert len(sim) == len(legacy)
+    for step in range(1500):
+        assert sim.at(step) == legacy.at(step)
+    # the pure-compat scenario adds no node costs: constant-pricing parity
+    assert all(sim.iteration_factor(s) == 1.0 for s in range(1500))
+    assert all(sim.failure_overhead(e.step, e.stage) == 0.0
+               for e in sim.events)
+
+
+def test_bernoulli_parity_without_edge_protection():
+    legacy = FailureSchedule(rate_per_hour=0.16, iteration_time_s=300.0,
+                             num_stages=5, steps=800, seed=3,
+                             protect_edges=False)
+    sim = simulate(get_scenario("bernoulli", rate_per_hour=0.16,
+                                iteration_time_s=300.0),
+                   steps=800, seed=3, num_stages=5, protect_edges=False)
+    assert sim.events == legacy.events
+
+
+# ---------------------------------------------------------------------------
+# determinism (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["spot_diurnal", "flash_crowd", "wearout",
+                                  "trace:spot_demo.jsonl"])
+def test_same_seed_same_scenario_is_bit_reproducible(name):
+    a = simulate(name, steps=1000, seed=11)
+    b = simulate(name, steps=1000, seed=11)
+    assert a.events == b.events
+    np.testing.assert_array_equal(a.result.iter_factors,
+                                  b.result.iter_factors)
+    np.testing.assert_array_equal(a.result.times_h, b.result.times_h)
+    assert a.result.overheads == b.result.overheads
+    assert a.result.node_log == b.result.node_log
+
+
+def test_different_seed_changes_stochastic_scenarios():
+    a = simulate("spot_diurnal", steps=2000, seed=0)
+    b = simulate("spot_diurnal", steps=2000, seed=1)
+    assert a.events != b.events
+
+
+def test_trace_replay_is_seed_independent():
+    a = simulate("trace:spot_demo.jsonl", steps=500, seed=0)
+    b = simulate("trace:spot_demo.jsonl", steps=500, seed=99)
+    assert a.events == b.events
+
+
+# ---------------------------------------------------------------------------
+# trace replay
+# ---------------------------------------------------------------------------
+
+def test_trace_events_land_on_their_iteration(tmp_path):
+    trace = tmp_path / "t.jsonl"
+    trace.write_text('# comment\n'
+                     '{"t_h": 0.09, "stage": 1}\n'
+                     '{"t_h": 0.26, "stage": 2}\n'
+                     '{"t_h": 0.0, "stage": 0}\n')  # protected -> skipped
+    sc = get_scenario(f"trace:{trace}", iteration_time_s=300.0,
+                      num_stages=4, protect_edges=True,
+                      restart_latency_s=0.0, bandwidth_Bps=float("inf"))
+    sim = simulate(sc, steps=12, seed=0)
+    # dt = 300 s = 1/12 h: t=0.09 -> step 1, t=0.26 -> step 3
+    assert [(e.step, e.stage) for e in sim.events] == [(1, 1), (3, 2)]
+
+
+def test_trace_bad_line_raises(tmp_path):
+    trace = tmp_path / "bad.jsonl"
+    trace.write_text('{"t_h": "not-a-number and no stage"}\n')
+    with pytest.raises(ValueError, match="bad trace line"):
+        simulate(f"trace:{trace}", steps=4, seed=0)
+
+
+def test_packaged_trace_resolves_and_parses():
+    path = resolve_trace_path("spot_demo.jsonl")
+    events = load_trace(path)
+    assert len(events) > 10
+    assert events == sorted(events, key=lambda e: e[0])
+
+
+def test_adjacency_suppressed_trace_events_are_recorded(tmp_path):
+    trace = tmp_path / "t.jsonl"
+    # same iteration window, adjacent stages: only one can fail (paper §3)
+    trace.write_text('{"t_h": 0.09, "stage": 1}\n'
+                     '{"t_h": 0.10, "stage": 2}\n')
+    sim = simulate(get_scenario(f"trace:{trace}", iteration_time_s=300.0,
+                                num_stages=4), steps=12, seed=0)
+    assert [(e.step, e.stage) for e in sim.events] == [(1, 1)]
+    assert [(e.step, e.stage) for e in sim.result.suppressed] == [(1, 2)]
+
+
+# ---------------------------------------------------------------------------
+# scenario registry
+# ---------------------------------------------------------------------------
+
+def test_registry_has_the_named_scenarios():
+    names = available_scenarios()
+    for required in ("bernoulli", "paper_5pct", "paper_10pct", "paper_16pct",
+                     "spot_diurnal", "flash_crowd", "wearout"):
+        assert required in names
+
+
+def test_unknown_scenario_and_missing_trace_raise():
+    with pytest.raises(KeyError, match="unknown scenario"):
+        get_scenario("nope")
+    with pytest.raises(FileNotFoundError):
+        get_scenario("trace:does_not_exist.jsonl")
+
+
+def test_scenario_overrides_and_validation():
+    sc = get_scenario("spot_diurnal", num_stages=8, rate_per_hour=0.5)
+    assert sc.num_stages == 8 and sc.rate_per_hour == 0.5
+    with pytest.raises(AssertionError):
+        get_scenario("bernoulli", rejoin="teleport")
+    with pytest.raises(AssertionError, match="unknown process"):
+        get_scenario("bernoulli", process="lunar-not-registered")
+
+
+def test_custom_process_plugin_roundtrip():
+    # the docs/simulator.md recipe: subclass + register_process is all a
+    # plugin needs for validate()/get_scenario()/simulate() to accept it
+    from repro.sim import (HazardProcess, ScenarioConfig, register_process,
+                           register_scenario)
+
+    class AlwaysStormy(HazardProcess):
+        def rate_at(self, t_h, node):
+            return 50.0
+
+    register_process("test_stormy", AlwaysStormy)
+    register_scenario(ScenarioConfig(name="test_stormy_world",
+                                     process="test_stormy"))
+    sim = simulate("test_stormy_world", steps=50, seed=0)
+    assert len(sim) > 0
+
+
+# ---------------------------------------------------------------------------
+# node-dependent wall-clock
+# ---------------------------------------------------------------------------
+
+def test_respawn_overhead_prices_restart_plus_transfer():
+    wall = WallClockModel(model_bytes=int(4e8))
+    sc = get_scenario("bernoulli", rate_per_hour=3.0, iteration_time_s=600.0,
+                      restart_latency_s=45.0, bandwidth_Bps=1e6)
+    sim = simulate(sc, steps=300, seed=0, num_stages=4, wall=wall)
+    assert len(sim) > 0
+    expected = 45.0 + wall.stage_bytes(4) / 1e6
+    for e in sim.events:
+        assert sim.failure_overhead(e.step, e.stage) == pytest.approx(expected)
+
+
+def test_stragglers_stretch_every_iteration():
+    sc = get_scenario("bernoulli", slow_fraction=1.0, slow_factor=2.5)
+    sim = simulate(sc, steps=50, seed=0)
+    assert all(sim.iteration_factor(s) == 2.5 for s in range(50))
+
+
+def test_rejoin_policy_runs_on_a_spare_then_rejoins(tmp_path):
+    trace = tmp_path / "t.jsonl"
+    trace.write_text('{"t_h": 0.09, "stage": 1}\n')
+    sc = get_scenario(f"trace:{trace}", iteration_time_s=300.0, num_stages=4,
+                      rejoin="rejoin", spare_penalty=2.0,
+                      restart_latency_s=1200.0, bandwidth_Bps=1e8)
+    wall = WallClockModel(model_bytes=int(4e8))
+    sim = simulate(sc, steps=30, seed=0, wall=wall)
+    assert [(e.step, e.stage) for e in sim.events] == [(1, 1)]
+    # only the transfer to the spare is charged per-event; the restart
+    # latency is paid through stretched iterations until the node rejoins
+    assert sim.failure_overhead(1, 1) == pytest.approx(
+        wall.stage_bytes(4) / 1e8)
+    # failure during step 1; restart takes 1200 s ~ 4 nominal iterations
+    assert sim.iteration_factor(1) == 1.0   # factor fixed at step start
+    assert sim.iteration_factor(2) == 2.0   # spare stalls the pipeline
+    rejoin_steps = [s for (kind, s, stage, _) in sim.result.node_log
+                    if kind == "rejoin"]
+    assert rejoin_steps and all(sim.iteration_factor(s) == 1.0
+                                for s in range(rejoin_steps[0], 30))
+
+
+def test_observed_rate_tracks_trailing_window():
+    sim = simulate("bernoulli", steps=200, seed=0, rate_window=10)
+    assert sim.observed_rate(0) == 0.0
+    fails_in = sum(1 for e in sim.events if 40 <= e.step < 50)
+    assert sim.observed_rate(50) == pytest.approx(fails_in / 10.0)
+
+
+# ---------------------------------------------------------------------------
+# trainer integration
+# ---------------------------------------------------------------------------
+
+def _tcfg(strategy, steps, **rkw):
+    rcfg = RecoveryConfig(strategy=strategy, num_stages=STAGES, **rkw)
+    return TrainConfig(global_batch=4, microbatch=4, seq_len=32, steps=steps,
+                       eval_every=100,
+                       optimizer=OptimizerConfig(lr=1e-3, total_steps=steps,
+                                                 warmup_steps=2),
+                       recovery=rcfg)
+
+
+def _batches():
+    return make_batches(CFG, batch=4, seq=32, seed=0)
+
+
+def test_trainer_prices_sim_iterations_and_overheads(tmp_path):
+    trace = tmp_path / "t.jsonl"
+    trace.write_text('{"t_h": 0.09, "stage": 1}\n'
+                     '{"t_h": 0.26, "stage": 2}\n')
+    sc = get_scenario(f"trace:{trace}", iteration_time_s=300.0,
+                      num_stages=STAGES, slow_fraction=1.0, slow_factor=1.5,
+                      restart_latency_s=90.0, bandwidth_Bps=62.5e6)
+    schedule = simulate(sc, steps=60, seed=0)
+    tcfg = _tcfg("none", steps=6)
+    trainer = Trainer(build_model(CFG), tcfg, schedule=schedule)
+    state, hist = trainer.run(_batches())
+    assert hist.wall_iters == 6 and not hist.truncated
+    # stragglers stretch dt, so events land on earlier (stretched) windows
+    assert hist.failures == [(e.step, e.stage) for e in schedule.events]
+    assert len(hist.failures) == 2
+    iter_cost = trainer.strategy.iteration_cost()
+    expected = sum(iter_cost * schedule.iteration_factor(s) for s in range(6))
+    expected += sum(schedule.failure_overhead(s, st)
+                    for s, st in hist.failures)
+    assert hist.wall_time[-1] == pytest.approx(expected)
+
+
+def test_adaptive_switches_on_simulator_signal(tmp_path):
+    trace = tmp_path / "storm.jsonl"
+    trace.write_text("\n".join(
+        f'{{"t_h": {0.09 + 0.0833 * i:.4f}, "stage": {1 + i % 2}}}'
+        for i in range(4)))
+    sc = get_scenario(f"trace:{trace}", iteration_time_s=300.0,
+                      num_stages=STAGES)
+    # short telemetry window so the storm's signal drains before the run
+    # ends and the policy can switch back down
+    schedule = simulate(sc, steps=120, seed=0, rate_window=4)
+    tcfg = _tcfg("adaptive", steps=12, checkpoint_every=3,
+                 checkpoint_dir=str(tmp_path / "ckpt"),
+                 adaptive_threshold=0.05, adaptive_window=64)
+    trainer = Trainer(build_model(CFG), tcfg, schedule=schedule)
+    state, hist = trainer.run(_batches())
+    strat = trainer.strategy
+    assert strat._env_rate is not None          # telemetry flowed
+    assert any(to == "checkpoint" for _, _, to in strat.switches)
+    assert any(to == "checkfree" for _, _, to in strat.switches)
+
+
+def test_adaptive_env_rate_supersedes_local_window():
+    rcfg = RecoveryConfig(strategy="adaptive", num_stages=STAGES,
+                          adaptive_threshold=0.05)
+    strat = make_strategy(rcfg, wall=WallClockModel())
+    assert strat.failure_rate() == 0.0          # empty window
+    strat.observe_environment(0.5)
+    assert strat.failure_rate() == 0.5          # telemetry wins
+    state = types.SimpleNamespace(effective_step=1, params=None,
+                                  opt_state=None)
+    strat.after_step(state, types.SimpleNamespace())
+    assert strat.active is strat.high and strat.switches
+
+
+def test_truncated_runs_are_flagged_and_warn(tmp_path):
+    # failures every step + no checkpoint ever saved -> restart loop that
+    # can never reach tcfg.steps: the max_wall bound must fire loudly
+    schedule = FailureSchedule(rate_per_hour=1e6, iteration_time_s=1e6,
+                               num_stages=STAGES, steps=100, seed=0)
+    tcfg = _tcfg("checkpoint", steps=3, checkpoint_every=1000,
+                 checkpoint_dir=str(tmp_path / "ckpt"))
+    trainer = Trainer(build_model(CFG), tcfg, schedule=schedule)
+    with pytest.warns(RuntimeWarning, match="truncated at max_wall"):
+        state, hist = trainer.run(_batches())
+    assert hist.truncated
+    assert hist.wall_iters == 3 * 10
+    assert state.effective_step < 3
+
+
+def test_untruncated_runs_stay_unflagged():
+    tcfg = _tcfg("none", steps=3)
+    trainer = Trainer(build_model(CFG), tcfg)
+    state, hist = trainer.run(_batches())
+    assert not hist.truncated
+
+
+def test_trainer_builds_schedule_from_config_scenario():
+    tcfg = _tcfg("checkfree", steps=3, scenario="spot_diurnal", seed=5)
+    trainer = Trainer(build_model(CFG), tcfg)
+    assert trainer.schedule is not None
+    ref = simulate("spot_diurnal", steps=30, seed=5, num_stages=STAGES,
+                   protect_edges=True, wall=trainer.wall)
+    assert trainer.schedule.events == ref.events
