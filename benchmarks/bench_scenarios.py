@@ -23,13 +23,16 @@ from benchmarks.common import FAST_STEPS, fmt_table, run_strategy, save_json
 
 SCENARIOS = ["paper_10pct", "spot_diurnal", "flash_crowd", "wearout",
              "trace:spot_demo.jsonl"]
-STRATEGIES = ["checkfree", "checkfree_plus", "checkpoint", "redundant",
-              "adaptive"]
+STRATEGIES = ["checkfree", "checkfree_plus", "checkpoint", "tiered_ckpt",
+              "neighbor", "redundant", "adaptive"]
 
-# the CI smoke sweep: one cheap strategy through one scenario per process
-# family (incl. a trace replay), tiny step count, no cache
+# the CI smoke sweep: every process family (incl. a trace replay) x the
+# paper's policy + both statestore-backed baselines (their recovery
+# wall-clock is priced through the store's tier bandwidths), tiny step
+# count, no cache
 SMOKE_SCENARIOS = ["bernoulli", "spot_diurnal", "flash_crowd",
                    "trace:spot_demo.jsonl"]
+SMOKE_STRATEGIES = ["checkfree", "tiered_ckpt", "neighbor"]
 
 
 def run(steps: int = FAST_STEPS, scenarios: Optional[List[str]] = None,
@@ -54,6 +57,7 @@ def run(steps: int = FAST_STEPS, scenarios: Optional[List[str]] = None,
                 "n_failures": rec["n_failures"],
                 "wall_iters": rec["wall_iters"],
                 "wall_hours": rec["wall_time"][-1] / 3600,
+                "iter_time_s": rec["iter_time_s"],
                 "avg_iter_time_s": rec["avg_iter_time_s"],
                 "final_eval": final,
                 "truncated": rec.get("truncated", False),
@@ -84,7 +88,7 @@ def main() -> None:
         # step 9), so the replay path exercises a real recovery
         out = run(steps=args.steps or 12,
                   scenarios=scenarios or SMOKE_SCENARIOS,
-                  strategies=strategies or ["checkfree"], use_cache=False)
+                  strategies=strategies or SMOKE_STRATEGIES, use_cache=False)
         assert all(rec["wall_iters"] > 0
                    for per_sc in out.values() for rec in per_sc.values())
         # the trace replay must actually deliver a preemption, or the
@@ -92,7 +96,17 @@ def main() -> None:
         assert all(rec["n_failures"] >= 1
                    for sc, per_sc in out.items() if sc.startswith("trace:")
                    for rec in per_sc.values()), "trace replay saw no failures"
-        print("smoke OK: all scenarios ran end-to-end through Trainer")
+        # the statestore strategies must price their snapshot traffic
+        # through the tier specs: replication/write residuals make their
+        # nominal iteration strictly dearer than checkfree's bare iteration
+        for sc, per_sc in out.items():
+            if "checkfree" in per_sc:
+                base = per_sc["checkfree"]["iter_time_s"]
+                for s in ("tiered_ckpt", "neighbor"):
+                    if s in per_sc:
+                        assert per_sc[s]["iter_time_s"] > base, (sc, s)
+        print("smoke OK: all scenarios ran end-to-end through Trainer "
+              f"({', '.join(strategies or SMOKE_STRATEGIES)})")
         return
     run(steps=args.steps or FAST_STEPS, scenarios=scenarios,
         strategies=strategies)

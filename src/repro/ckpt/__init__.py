@@ -1,2 +1,3 @@
 from repro.ckpt.checkpoint import (  # noqa: F401
-    save_checkpoint, load_checkpoint, latest_step, Checkpointer)
+    CheckpointError, Checkpointer, clean_stale_tmp, latest_step,
+    load_checkpoint, save_checkpoint)

@@ -1,73 +1,153 @@
-"""Disk checkpointing — the baseline recovery strategy the paper compares
-against (periodic full-model save to "non-faulty storage" + rollback on
-failure).
+"""Disk checkpointing — thin compatibility shim over ``repro.statestore``.
 
-Arrays are stored in ``.npz`` files keyed by flattened tree index; loading
-requires a template pytree with the same structure (standard JAX practice —
-the model config defines the structure).  A :class:`Checkpointer` implements
-the rollback protocol used by the trainer.
+The original synchronous full-model ``.npz`` dump now rides the state
+store's disk tier: the same ``ckpt_<step>.npz`` directory layout and the
+same module API (``save_checkpoint`` / ``load_checkpoint`` /
+``latest_step`` / :class:`Checkpointer`), but files are written through
+the dtype-preserving codec (bf16 leaves round-trip bit-exactly instead of
+degrading to raw void records), failures raise :class:`CheckpointError`
+instead of bare ``assert`` (which vanishes under ``python -O``), stale
+``*.tmp`` leftovers from interrupted saves are swept on startup, and a
+corrupted newest checkpoint falls back to the previous intact one instead
+of killing the rollback.
+
+Legacy checkpoints written by the pre-statestore format (typed ``leaf_<i>``
+arrays, no manifest) still load — including bf16 leaves the old writer
+mangled into ``|V2`` records, which are recovered by reinterpreting the
+raw bytes through the template dtype.
+
+The tiered strategies (``tiered_ckpt`` / ``neighbor``) do not go through
+this shim; they use :class:`repro.statestore.StateStore` directly.
 """
 from __future__ import annotations
 
 import os
 import re
 import shutil
-from typing import Any, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
 
+from repro.core.walltime import TierSpec
+from repro.statestore.codec import (CodecError, decode, host_snapshot,
+                                    snapshot_to_tree)
+from repro.statestore.policy import RetentionPolicy
+from repro.statestore.store import StateStore, StoreError
+from repro.statestore.tiers import DiskTier
+
 Pytree = Any
 
+_CKPT_TEMPLATE = "ckpt_{step:08d}.npz"
+_CKPT_RE = re.compile(r"ckpt_(\d+)\.npz$")
 
-def _flatten(tree: Pytree):
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    return leaves, treedef
+# the shim prices nothing (the analytic model charges checkpoints through
+# WallClockModel / tier_specs); this spec only parameterizes the container
+_SHIM_SPEC = TierSpec("disk", "disk", capacity_bytes=float("inf"),
+                      latency_s=0.0, bandwidth_Bps=float("inf"))
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint is missing, corrupted, or does not match its template."""
+
+
+def _tier(directory: str) -> DiskTier:
+    return DiskTier(_SHIM_SPEC, directory, template=_CKPT_TEMPLATE)
+
+
+def clean_stale_tmp(directory: str) -> List[str]:
+    """Remove leftover temp files from interrupted saves (both the current
+    ``*.npz.tmp`` and the legacy ``*.npz.tmp.npz`` convention); returns the
+    removed filenames.  The disk tier also does this on startup."""
+    return _tier(directory).cleaned_on_init
 
 
 def save_checkpoint(directory: str, step: int, tree: Pytree) -> str:
     """Write ``tree`` to ``directory/ckpt_<step>.npz`` (atomic rename)."""
-    os.makedirs(directory, exist_ok=True)
-    leaves, _ = _flatten(tree)
-    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
-    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    tmp = path + ".tmp.npz"
-    np.savez(tmp, **arrays)
-    os.replace(tmp, path)
-    return path
+    tier = _tier(directory)
+    tier.put(host_snapshot(tree, step=step, shard_id="full"))
+    return os.path.join(directory, _CKPT_TEMPLATE.format(step=step))
+
+
+def _load_legacy(path: str, template: Pytree) -> Pytree:
+    """Pre-statestore format: typed ``leaf_<i>`` arrays, no manifest."""
+    try:
+        data = np.load(path)
+    except Exception as e:
+        raise CheckpointError(f"unreadable checkpoint {path}: {e}") from e
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    loaded = []
+    for i, ref in enumerate(leaves):
+        key = f"leaf_{i}"
+        if key not in data:
+            raise CheckpointError(
+                f"{path} is missing leaf {i} (partial/truncated save?)")
+        got = np.asarray(data[key])
+        if tuple(np.shape(ref)) != got.shape:
+            raise CheckpointError(
+                f"{path} leaf {i}: shape {got.shape} != template "
+                f"{np.shape(ref)}")
+        ref_dtype = np.dtype(ref.dtype)
+        if got.dtype != ref_dtype:
+            if got.dtype.kind == "V" and \
+                    got.dtype.itemsize == ref_dtype.itemsize:
+                # the old writer stored extended dtypes (bf16) as raw void
+                # records; the bytes are intact — reinterpret them
+                got = np.frombuffer(got.tobytes(),
+                                    dtype=ref_dtype).reshape(got.shape)
+            else:
+                raise CheckpointError(
+                    f"{path} leaf {i}: dtype {got.dtype} != template "
+                    f"{ref_dtype}")
+        loaded.append(got)
+    return jax.tree_util.tree_unflatten(treedef, loaded)
 
 
 def load_checkpoint(directory: str, template: Pytree,
                     step: Optional[int] = None) -> Tuple[int, Pytree]:
     """Load the checkpoint at ``step`` (default: latest) into the structure
-    of ``template``."""
+    of ``template``; raises :class:`CheckpointError` on a missing,
+    corrupted, or mismatched checkpoint."""
     if step is None:
         step = latest_step(directory)
-        assert step is not None, f"no checkpoints in {directory}"
-    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    data = np.load(path)
-    leaves, treedef = _flatten(template)
-    loaded = [np.asarray(data[f"leaf_{i}"]) for i in range(len(leaves))]
-    for i, (ref, got) in enumerate(zip(leaves, loaded)):
-        assert np.shape(ref) == got.shape, (i, np.shape(ref), got.shape)
-    return step, jax.tree_util.tree_unflatten(treedef, loaded)
+        if step is None:
+            raise CheckpointError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, _CKPT_TEMPLATE.format(step=step))
+    if not os.path.exists(path):
+        raise CheckpointError(f"no checkpoint at step {step} in {directory}")
+    with open(path, "rb") as f:
+        blob = f.read()
+    try:
+        return step, snapshot_to_tree(decode(blob), template)
+    except CodecError as codec_err:
+        try:
+            return step, _load_legacy(path, template)
+        except CheckpointError as legacy_err:
+            raise CheckpointError(
+                f"checkpoint {path} failed to load (codec: {codec_err}; "
+                f"legacy: {legacy_err})") from legacy_err
 
 
 def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None
     steps = [int(m.group(1)) for f in os.listdir(directory)
-             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+             if (m := _CKPT_RE.match(f))]
     return max(steps) if steps else None
 
 
 class Checkpointer:
-    """Periodic checkpoint + rollback protocol (the paper's baseline).
+    """Periodic checkpoint + rollback protocol (the paper's baseline),
+    backed by a single-disk-tier :class:`~repro.statestore.StateStore`.
 
     ``maybe_save`` is called every iteration; ``rollback`` returns the last
     saved state and the number of lost iterations (the rollback cost that
-    dominates the paper's Fig. 4b comparison).
+    dominates the paper's Fig. 4b comparison).  Saves stay synchronous —
+    the asynchronous snapshot path belongs to the ``tiered_ckpt`` strategy;
+    this class *is* the strawman being compared against.
     """
+
+    SHARD = "full"
 
     def __init__(self, directory: str, every: int, keep: int = 3):
         self.dir = directory
@@ -76,30 +156,28 @@ class Checkpointer:
         if os.path.isdir(directory):
             shutil.rmtree(directory)
         os.makedirs(directory, exist_ok=True)
+        self.store = StateStore(
+            [_tier(directory)],
+            RetentionPolicy(keep={"disk": keep}))
 
     def maybe_save(self, step: int, tree: Pytree) -> bool:
         if step % self.every != 0:
             return False
-        save_checkpoint(self.dir, step, tree)
-        self._gc()
+        self.store.put(tree, step=step, shard_id=self.SHARD, tier="disk",
+                       sync=True)
         return True
 
     def has_checkpoint(self) -> bool:
         """True once at least one save landed (rollback will not raise)."""
-        return latest_step(self.dir) is not None
+        return self.store.latest_step(self.SHARD) is not None
 
     def rollback(self, current_step: int, template: Pytree,
                  ) -> Tuple[int, Pytree, int]:
-        """Returns (ckpt_step, tree, lost_iterations)."""
-        step = latest_step(self.dir)
-        if step is None:  # nothing saved yet -> restart from step 0
-            raise RuntimeError("no checkpoint to roll back to")
-        step, tree = load_checkpoint(self.dir, template, step)
-        return step, tree, current_step - step
-
-    def _gc(self) -> None:
-        steps = sorted(int(re.match(r"ckpt_(\d+)\.npz$", f).group(1))
-                       for f in os.listdir(self.dir)
-                       if re.match(r"ckpt_(\d+)\.npz$", f))
-        for s in steps[:-self.keep]:
-            os.remove(os.path.join(self.dir, f"ckpt_{s:08d}.npz"))
+        """Returns (ckpt_step, tree, lost_iterations); a corrupted newest
+        checkpoint falls back to the previous intact one."""
+        try:
+            res = self.store.restore(self.SHARD, template)
+        except StoreError as e:
+            raise CheckpointError(f"no checkpoint to roll back to: {e}") \
+                from e
+        return res.step, res.tree, current_step - res.step

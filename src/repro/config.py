@@ -231,6 +231,16 @@ class RecoveryConfig:
                                       # wall-clock from the simulator
     seed: int = 0
     protect_edge_stages: bool = True  # CheckFree (not +) cannot lose S_first/S_last
+    # --- statestore (strategy="tiered_ckpt" / "neighbor"): tiered state ---
+    store_dir: str = "/tmp/repro_statestore"  # disk/remote tier directories
+    hot_every: int = 1                # memory-tier snapshot interval (iters)
+    cold_every: int = 0               # disk-tier interval; 0 -> checkpoint_every
+    remote_every: int = 0             # remote-tier interval; 0 -> 10x cold
+    keep_hot: int = 2                 # snapshots kept per shard in memory
+    keep_cold: int = 3                # snapshots kept per shard on disk/remote
+    neighbor_cold: bool = True        # neighbor keeps a disk safety net (off =
+                                      # pure FFTrainer: zero disk traffic, but a
+                                      # dead replica holder loses the shard)
     # --- adaptive (strategy="adaptive"): Chameleon-style policy switching ---
     adaptive_low: str = "checkfree"   # active while the observed rate is calm
     adaptive_high: str = "checkpoint" # active above the threshold

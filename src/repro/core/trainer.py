@@ -155,6 +155,33 @@ class Trainer:
 
         wall_step = 0
         max_wall = tcfg.steps * 10  # safety bound for rollback-heavy runs
+        try:
+            state, hist, clock, wall_step = self._loop(
+                eval_batches, verbose, state, hist, clock,
+                wall_step, max_wall, batch_at,
+                iter_factor, failure_overhead, observed_rate, key)
+        finally:
+            # release background resources (async snapshot writers) even
+            # when the loop raises
+            strategy.on_run_end()
+
+        hist.wall_iters = wall_step
+        if state.effective_step < tcfg.steps:
+            # the max_wall safety bound fired: the run is NOT converged, and
+            # rollback-heavy sweeps must not masquerade as such
+            hist.truncated = True
+            warnings.warn(
+                f"Trainer.run truncated at max_wall={max_wall} wall "
+                f"iterations (effective_step={state.effective_step}/"
+                f"{tcfg.steps}); results are incomplete", RuntimeWarning,
+                stacklevel=2)
+        return state, hist
+
+    def _loop(self, eval_batches, verbose, state, hist, clock,
+              wall_step, max_wall, batch_at, iter_factor, failure_overhead,
+              observed_rate, key):
+        tcfg = self.tcfg
+        strategy = self.strategy
         while state.effective_step < tcfg.steps and wall_step < max_wall:
             # 0) environment telemetry (the simulator's observed failure
             #    rate) reaches the strategy before this iteration's events
@@ -185,8 +212,17 @@ class Trainer:
                     for stage in run:
                         hist.failures.append((wall_step, stage))
                         clock += strategy.failure_cost()
+                        # store-backed strategies report the actual
+                        # serialized bytes shipped to the replacement node;
+                        # drained unconditionally (the per-event queue must
+                        # stay in lockstep with failure_cost even when the
+                        # schedule has no repricing hook)
+                        nbytes = strategy.consume_restore_bytes()
                         if failure_overhead is not None:
-                            clock += failure_overhead(wall_step, stage)
+                            clock += (failure_overhead(wall_step, stage)
+                                      if nbytes is None else
+                                      failure_overhead(wall_step, stage,
+                                                       nbytes))
 
             # 2) one training iteration
             batch = batch_at(state.effective_step)
@@ -220,14 +256,4 @@ class Trainer:
                           f"{metrics['loss']:.3f} eval {el:.3f}")
             wall_step += 1
 
-        hist.wall_iters = wall_step
-        if state.effective_step < tcfg.steps:
-            # the max_wall safety bound fired: the run is NOT converged, and
-            # rollback-heavy sweeps must not masquerade as such
-            hist.truncated = True
-            warnings.warn(
-                f"Trainer.run truncated at max_wall={max_wall} wall "
-                f"iterations (effective_step={state.effective_step}/"
-                f"{tcfg.steps}); results are incomplete", RuntimeWarning,
-                stacklevel=2)
-        return state, hist
+        return state, hist, clock, wall_step

@@ -23,6 +23,32 @@ replacement node's bandwidth) on top of the per-strategy costs.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class TierSpec:
+    """Pricing description of one storage tier (TierCheck's tier model).
+
+    The constants live here (next to the other timing constants) so both the
+    analytic model and the ``repro.statestore`` tiers price reads/writes
+    identically; the tiers themselves (capacity enforcement, eviction, actual
+    I/O) live in :mod:`repro.statestore.tiers`.
+    """
+
+    name: str
+    kind: str                    # "memory" | "disk" | "remote"
+    capacity_bytes: float
+    latency_s: float             # per-operation fixed cost
+    bandwidth_Bps: float         # sustained transfer rate
+
+    def read_time_s(self, nbytes: float) -> float:
+        if self.bandwidth_Bps <= 0 or self.bandwidth_Bps == float("inf"):
+            return self.latency_s
+        return self.latency_s + nbytes / self.bandwidth_Bps
+
+    def write_time_s(self, nbytes: float) -> float:
+        return self.read_time_s(nbytes)
 
 
 @dataclass
@@ -34,9 +60,34 @@ class WallClockModel:
     ckpt_bandwidth_Bps: float = 62.5e6   # 500 Mb/s to non-faulty storage (fn.2)
     restart_overhead_s: float = 60.0     # checkpoint rollback: redeploy + load
     model_bytes: int = int(2e9)          # serialized model+opt (500M fp32 ~ 8GB/4)
+    # --- statestore tiers (TierCheck's memory -> local disk -> remote) ------
+    mem_bandwidth_Bps: float = 12.8e9    # peer host memory over the fabric
+    mem_latency_s: float = 1e-4
+    mem_capacity_bytes: float = 16e9
+    disk_bandwidth_Bps: float = 2e9      # local NVMe
+    disk_latency_s: float = 5e-3
+    disk_capacity_bytes: float = 1e12
+    remote_latency_s: float = 0.2        # object-store round trip
+    remote_capacity_bytes: float = float("inf")
+
+    def tier_specs(self) -> Dict[str, TierSpec]:
+        """The default three-tier hierarchy, fastest first.  The remote tier
+        reuses ``ckpt_bandwidth_Bps`` — the paper's 500 Mb/s link to
+        "non-faulty storage" (fn. 2), what the old flat checkpoint pricing
+        charged — so porting the baseline onto tiers only adds the remote
+        round-trip latency (~0.6% of a full-model save)."""
+        return {
+            "mem": TierSpec("mem", "memory", self.mem_capacity_bytes,
+                            self.mem_latency_s, self.mem_bandwidth_Bps),
+            "disk": TierSpec("disk", "disk", self.disk_capacity_bytes,
+                             self.disk_latency_s, self.disk_bandwidth_Bps),
+            "remote": TierSpec("remote", "remote", self.remote_capacity_bytes,
+                               self.remote_latency_s, self.ckpt_bandwidth_Bps),
+        }
 
     def ckpt_save_time_s(self) -> float:
-        return self.model_bytes / self.ckpt_bandwidth_Bps
+        """Full-model serialize to the remote ("non-faulty") tier."""
+        return self.tier_specs()["remote"].write_time_s(self.model_bytes)
 
     def stage_bytes(self, num_stages: int) -> float:
         """Serialized bytes of one pipeline stage (model+opt split evenly);

@@ -17,3 +17,5 @@ from repro.recovery.registry import (available_strategies,  # noqa: F401
 # import for registration side effects: the built-in policies
 from repro.recovery import strategies as _strategies  # noqa: F401,E402
 from repro.recovery import adaptive as _adaptive  # noqa: F401,E402
+# ... and the statestore-backed ones (tiered_ckpt / neighbor)
+from repro import statestore as _statestore  # noqa: F401,E402

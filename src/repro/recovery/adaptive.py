@@ -117,12 +117,22 @@ class Adaptive(RecoveryStrategy):
         if self.high is not self.low:
             self.high.after_step(state, hist)
 
+    def on_run_end(self) -> None:
+        # both children may own background resources (statestore children
+        # run an async snapshot writer even while shadowing)
+        self.low.on_run_end()
+        if self.high is not self.low:
+            self.high.on_run_end()
+
     # ---- wall-clock model --------------------------------------------
     def iteration_cost(self) -> float:
         return self.active.iteration_cost()
 
     def failure_cost(self) -> float:
         return self.active.failure_cost()
+
+    def consume_restore_bytes(self):
+        return self.active.consume_restore_bytes()
 
     def __repr__(self) -> str:
         return (f"Adaptive(low={self.low.name}, high={self.high.name}, "

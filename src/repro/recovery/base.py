@@ -13,6 +13,9 @@ lifecycle hooks (called by the trainer)
                                       together (only if ``handles_consecutive``)
   ``after_step(state, hist)``       — bookkeeping after every wall iteration
                                       (checkpoint saves, window statistics)
+  ``on_run_end()``                  — loop exit (even on error): release
+                                      background resources (async snapshot
+                                      writers)
   ``observe_environment(rate)``     — cluster telemetry: the simulator's
                                       observed failure rate, fed once per
                                       wall iteration when available
@@ -102,6 +105,11 @@ class RecoveryStrategy:
     def after_step(self, state: "TrainState", hist: "History") -> None:
         pass
 
+    def on_run_end(self) -> None:
+        """Called once when the trainer's loop exits (even on error):
+        release background resources — the statestore strategies flush and
+        stop their asynchronous snapshot writer here."""
+
     def observe_environment(self, rate: float) -> None:
         """Environment telemetry: the cluster's observed failure rate
         (failures per wall iteration).  Called by the trainer once per wall
@@ -114,6 +122,14 @@ class RecoveryStrategy:
 
     def failure_cost(self) -> float:
         return 0.0
+
+    def consume_restore_bytes(self) -> Optional[float]:
+        """Serialized bytes that had to reach the replacement node for the
+        failure event just handled, or ``None`` for the schedule's default
+        stage-sized estimate.  Store-backed strategies report the actual
+        shard size served; the simulator's ``failure_overhead`` hook
+        reprices the state transfer with it."""
+        return None
 
     def __repr__(self) -> str:
         return f"{type(self).__name__}(name={self.name!r})"

@@ -23,7 +23,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.ckpt.checkpoint import Checkpointer
 from repro.core.recovery import (recover_consecutive, recover_stage,
                                  recovery_error)
 from repro.core.state import History, TrainState
@@ -54,9 +53,12 @@ class Redundant(RecoveryStrategy):
 class Checkpointing(RecoveryStrategy):
     """Periodic full-model save + rollback (the paper's baseline).
 
-    The :class:`Checkpointer` is created lazily on first use so that strategy
+    The :class:`Checkpointer` (a single-disk-tier view of
+    ``repro.statestore``) is created lazily on first use so that strategy
     construction stays side-effect-free (cost queries must not wipe
-    checkpoint directories).
+    checkpoint directories).  Wall-clock is priced through the *remote*
+    tier spec — the paper's 500 Mb/s link to non-faulty storage (fn. 2) —
+    which is numerically the old flat ``ckpt_bandwidth_Bps`` pricing.
     """
 
     def __init__(self, rcfg, wall):
@@ -64,8 +66,12 @@ class Checkpointing(RecoveryStrategy):
         self._ckpt = None
 
     @property
-    def checkpointer(self) -> Checkpointer:
+    def checkpointer(self):
         if self._ckpt is None:
+            # deferred import: repro.ckpt sits on top of repro.statestore,
+            # whose strategies import this module — resolving the
+            # Checkpointer at first use keeps the import graph acyclic
+            from repro.ckpt.checkpoint import Checkpointer
             self._ckpt = Checkpointer(self.rcfg.checkpoint_dir,
                                       self.rcfg.checkpoint_every)
         return self._ckpt
@@ -91,12 +97,17 @@ class Checkpointing(RecoveryStrategy):
                                      (state.params, state.opt_state))
 
     def iteration_cost(self) -> float:
-        # saves overlap training partially; amortized residual overhead
+        # saves overlap training partially; amortized residual overhead,
+        # priced by the remote tier's latency + bandwidth
+        remote = self.wall.tier_specs()["remote"]
         return (self.wall.iter_time_s +
-                0.1 * self.wall.ckpt_save_time_s() / self.rcfg.checkpoint_every)
+                0.1 * remote.write_time_s(self.wall.model_bytes)
+                / self.rcfg.checkpoint_every)
 
     def failure_cost(self) -> float:
-        return self.wall.restart_overhead_s + self.wall.ckpt_save_time_s()
+        remote = self.wall.tier_specs()["remote"]
+        return (self.wall.restart_overhead_s
+                + remote.read_time_s(self.wall.model_bytes))
 
 
 class MergeRecovery(RecoveryStrategy):

@@ -9,10 +9,12 @@ wall-clock hooks the trainer upgrades to when present:
 ``iteration_factor(step)``
     multiplier on the strategy's ``iteration_cost()`` for that wall
     iteration (slow/spare hosts stretch the pipeline);
-``failure_overhead(step, stage)``
+``failure_overhead(step, stage, nbytes=None)``
     extra modelled seconds for that failure event (replacement-node restart
     latency + shipping one stage of state over its bandwidth), charged on
-    top of the strategy's ``failure_cost()``;
+    top of the strategy's ``failure_cost()``; strategies that know the
+    actual serialized bytes they restored (``repro.statestore``) pass
+    ``nbytes`` and the transfer is repriced per event;
 ``observed_rate(step)``
     the cluster's trailing-window failures-per-iteration — the environment
     signal the ``adaptive`` strategy switches on instead of only its own
@@ -73,9 +75,24 @@ class SimFailureSchedule:
             return float(self.result.iter_factors[step])
         return 1.0
 
-    def failure_overhead(self, step: int, stage: int) -> float:
-        """Node-dependent extra seconds for the failure at (step, stage)."""
-        return self.result.overheads.get((step, stage), 0.0)
+    def failure_overhead(self, step: int, stage: int,
+                         nbytes: Optional[float] = None) -> float:
+        """Node-dependent extra seconds for the failure at (step, stage).
+
+        With ``nbytes`` (the serialized state a recovery strategy actually
+        shipped — e.g. one statestore shard) the transfer is repriced from
+        the event's recorded restart latency and replacement-node
+        bandwidth; without it the precomputed one-stage estimate stands.
+        """
+        if nbytes is None:
+            return self.result.overheads.get((step, stage), 0.0)
+        costs = self.result.event_costs.get((step, stage))
+        if costs is None:
+            return self.result.overheads.get((step, stage), 0.0)
+        latency_s, bandwidth_Bps = costs
+        if bandwidth_Bps <= 0 or bandwidth_Bps == float("inf"):
+            return latency_s
+        return latency_s + nbytes / bandwidth_Bps
 
     # ---- environment signal ------------------------------------------
     def observed_rate(self, step: int) -> float:

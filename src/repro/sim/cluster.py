@@ -56,6 +56,12 @@ class SimResult:
     times_h: np.ndarray             # [steps] sim time at each step start
     # (kind, step, stage, node_id) with kind in {"fail", "respawn", "rejoin"}
     node_log: List[Tuple[str, int, int, int]] = field(default_factory=list)
+    # per-event (restart latency s, replacement bandwidth B/s): the raw
+    # pricing inputs behind ``overheads``, kept so the adapter can reprice
+    # a transfer with the *actual* bytes a recovery strategy shipped
+    # (statestore shards) instead of the default one-stage estimate
+    event_costs: Dict[Tuple[int, int], Tuple[float, float]] = \
+        field(default_factory=dict)
 
     @property
     def total_hours(self) -> float:
@@ -114,6 +120,7 @@ class Cluster:
         events: List[FailureEvent] = []
         suppressed: List[FailureEvent] = []
         overheads: Dict[Tuple[int, int], float] = {}
+        event_costs: Dict[Tuple[int, int], Tuple[float, float]] = {}
         factors = np.ones(self.steps, np.float64)
         times = np.zeros(self.steps, np.float64)
         log = []
@@ -156,6 +163,7 @@ class Cluster:
                     # iter_factors), so only the state transfer is charged
                     overheads[(step, stage)] = dead.transfer_time_s(
                         self.stage_bytes)
+                    event_costs[(step, stage)] = (0.0, dead.bandwidth_Bps)
                     ready = t_h + dt_h + dead.restart_latency_s / 3600.0
                     self._restarting[stage] = (dead, ready)
                 else:  # respawn: a fresh node replaces it immediately
@@ -163,6 +171,8 @@ class Cluster:
                     overheads[(step, stage)] = (
                         new.restart_latency_s
                         + new.transfer_time_s(self.stage_bytes))
+                    event_costs[(step, stage)] = (new.restart_latency_s,
+                                                  new.bandwidth_Bps)
                     self.nodes[stage] = new
                     log.append(("respawn", step, stage, new.node_id))
 
@@ -173,4 +183,5 @@ class Cluster:
                          protect_edges=sc.protect_edges,
                          events=events, suppressed=suppressed,
                          overheads=overheads,
-                         iter_factors=factors, times_h=times, node_log=log)
+                         iter_factors=factors, times_h=times, node_log=log,
+                         event_costs=event_costs)

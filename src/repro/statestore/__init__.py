@@ -1,0 +1,30 @@
+"""Tiered, asynchronous state management (TierCheck / FFTrainer-style).
+
+The modern checkpointing baseline the paper's comparison deserves: a
+tiered state store (peer memory -> local disk -> remote storage, each with
+capacity/latency/bandwidth), asynchronous double-buffered snapshots,
+sharded per-stage checkpoints, retention policies, and a codec that
+round-trips arbitrary JAX pytrees (bf16 included) bit-exactly.  Two
+recovery strategies ride on it: ``tiered_ckpt`` and ``neighbor``.
+See ``docs/statestore.md``.
+
+    from repro.statestore import StateStore, MemoryTier, DiskTier
+
+    store = StateStore([MemoryTier(specs["mem"]),
+                        DiskTier(specs["disk"], "/tmp/ckpt")])
+    store.put(params, step=10, shard_id="stage01", tier="mem", host=2)
+    result = store.restore("stage01", template=params)
+"""
+from repro.statestore.codec import (CodecError, Snapshot,  # noqa: F401
+                                    decode, encode, host_snapshot,
+                                    snapshot_to_tree, tree_nbytes)
+from repro.statestore.policy import RetentionPolicy  # noqa: F401
+from repro.statestore.snapshot import (AsyncSnapshotter,  # noqa: F401
+                                       SnapshotWriteError)
+from repro.statestore.store import (RestoreResult, StateStore,  # noqa: F401
+                                    StoreError)
+from repro.statestore.tiers import (DiskTier, MemoryTier,  # noqa: F401
+                                    RemoteTier, StorageTier, TierError)
+
+# import for registration side effects: tiered_ckpt / neighbor strategies
+from repro.statestore import strategies as _strategies  # noqa: F401,E402

@@ -1,0 +1,163 @@
+"""Dtype-preserving pytree codec for the state store.
+
+``np.savez`` silently stores extended dtypes (``ml_dtypes.bfloat16`` and
+friends) as raw void records (``|V2``), so a naive ``.npz`` round-trip of a
+bf16 model *loses the dtype* even when every byte survives.  The codec
+therefore never trusts numpy's dtype serialization: every leaf is stored as
+its raw little-endian bytes (a ``uint8`` array) next to a JSON manifest
+recording dtype name, shape, and byte order; decoding views the bytes back
+through the original dtype.  This round-trips arbitrary JAX pytrees —
+including bf16 / fp8 leaves — bit-exactly.
+
+A :class:`Snapshot` is the in-memory unit of state the tiers move around:
+host-resident copies of the leaves (the "snapshot-on-host copy" that keeps
+the train step off the serialization critical path) plus the treedef needed
+to rebuild the pytree.
+"""
+from __future__ import annotations
+
+import io
+import json
+import zipfile
+from dataclasses import dataclass, field
+from typing import Any, List, Optional
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+MANIFEST_KEY = "__manifest__"
+_FORMAT_VERSION = 1
+
+
+class CodecError(RuntimeError):
+    """A snapshot could not be encoded/decoded or does not match its
+    template (corrupted file, missing leaves, shape/dtype mismatch)."""
+
+
+def _resolve_dtype(name: str) -> np.dtype:
+    """Dtype by name, including the ml_dtypes extensions numpy cannot
+    resolve on its own (``bfloat16``, ``float8_e4m3fn``, ...)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        pass
+    import ml_dtypes
+    try:
+        return np.dtype(getattr(ml_dtypes, name))
+    except (AttributeError, TypeError):
+        raise CodecError(f"cannot resolve dtype {name!r}") from None
+
+
+@dataclass
+class Snapshot:
+    """One host-resident copy of a pytree (or encoded-from-disk leaves)."""
+
+    shard_id: str                       # "full" or "stage<k>"
+    step: int                           # effective step the state belongs to
+    leaves: List[np.ndarray]            # host arrays, original dtypes
+    treedef: Optional[Any] = None       # None when decoded without a template
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def nbytes(self) -> int:
+        return int(sum(a.nbytes for a in self.leaves))
+
+
+def host_snapshot(tree: Pytree, *, step: int, shard_id: str) -> Snapshot:
+    """Device -> host copy of every leaf, dtype preserved.
+
+    This is the only part of a save that must happen synchronously (the
+    buffers may be mutated by the next train step); serialization and tier
+    I/O can run behind it.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    host = [np.asarray(x) for x in leaves]
+    return Snapshot(shard_id=shard_id, step=step, leaves=host,
+                    treedef=treedef)
+
+
+def snapshot_to_tree(snap: Snapshot, template: Optional[Pytree] = None,
+                     ) -> Pytree:
+    """Rebuild the pytree, validating against ``template`` when given."""
+    if template is not None:
+        t_leaves, treedef = jax.tree_util.tree_flatten(template)
+        if len(t_leaves) != len(snap.leaves):
+            raise CodecError(
+                f"snapshot {snap.shard_id}@{snap.step} has "
+                f"{len(snap.leaves)} leaves, template has {len(t_leaves)}")
+        for i, (ref, got) in enumerate(zip(t_leaves, snap.leaves)):
+            if tuple(np.shape(ref)) != tuple(got.shape):
+                raise CodecError(
+                    f"leaf {i}: shape {got.shape} != template "
+                    f"{np.shape(ref)}")
+            ref_dtype = np.dtype(getattr(ref, "dtype", np.float64))
+            if ref_dtype != got.dtype:
+                raise CodecError(
+                    f"leaf {i}: dtype {got.dtype} != template {ref_dtype}")
+    elif snap.treedef is not None:
+        treedef = snap.treedef
+    else:
+        raise CodecError("snapshot has no treedef; pass a template")
+    return jax.tree_util.tree_unflatten(treedef, snap.leaves)
+
+
+def encode(snap: Snapshot) -> bytes:
+    """Snapshot -> self-describing ``.npz`` bytes (raw leaves + manifest)."""
+    manifest = {
+        "version": _FORMAT_VERSION,
+        "shard_id": snap.shard_id,
+        "step": snap.step,
+        "leaves": [{"dtype": a.dtype.name, "shape": list(a.shape)}
+                   for a in snap.leaves],
+        "meta": snap.meta,
+    }
+    arrays = {}
+    for i, a in enumerate(snap.leaves):
+        raw = np.ascontiguousarray(a)
+        arrays[f"raw_{i}"] = np.frombuffer(raw.tobytes(), dtype=np.uint8)
+    arrays[MANIFEST_KEY] = np.frombuffer(
+        json.dumps(manifest).encode("utf-8"), dtype=np.uint8)
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    return buf.getvalue()
+
+
+def decode(blob: bytes) -> Snapshot:
+    """Bytes -> Snapshot (treedef is not stored; rebuild with a template)."""
+    try:
+        data = np.load(io.BytesIO(blob))
+    except (ValueError, OSError, zipfile.BadZipFile, EOFError) as e:
+        raise CodecError(f"unreadable snapshot blob: {e}") from e
+    try:
+        if MANIFEST_KEY not in data:
+            raise CodecError("snapshot blob has no manifest")
+        manifest = json.loads(bytes(data[MANIFEST_KEY]).decode("utf-8"))
+        leaves = []
+        for i, spec in enumerate(manifest["leaves"]):
+            key = f"raw_{i}"
+            if key not in data:
+                raise CodecError(f"snapshot blob is missing leaf {i} "
+                                 f"(partial/truncated write?)")
+            dtype = _resolve_dtype(spec["dtype"])
+            raw = data[key]
+            want = int(np.prod(spec["shape"])) * dtype.itemsize
+            if raw.nbytes != want:
+                raise CodecError(
+                    f"leaf {i}: {raw.nbytes} bytes on disk, expected {want}")
+            leaves.append(np.frombuffer(raw.tobytes(), dtype=dtype)
+                          .reshape(spec["shape"]))
+    except (KeyError, json.JSONDecodeError, ValueError) as e:
+        if isinstance(e, CodecError):
+            raise
+        raise CodecError(f"corrupted snapshot manifest: {e}") from e
+    return Snapshot(shard_id=manifest.get("shard_id", "full"),
+                    step=int(manifest.get("step", -1)), leaves=leaves,
+                    meta=manifest.get("meta", {}))
+
+
+def tree_nbytes(tree: Pytree) -> int:
+    """Serialized size of a pytree without copying it."""
+    return int(sum(np.dtype(x.dtype).itemsize * int(np.prod(np.shape(x)))
+                   for x in jax.tree_util.tree_leaves(tree)))

@@ -1,0 +1,241 @@
+"""Storage tiers: where snapshots live and what touching them costs.
+
+TierCheck's tier model: state flows through a hierarchy of stores with
+very different capacity/latency/bandwidth points — peer host **memory**
+(almost free, lost when the host dies), **local disk** (survives process
+death, costs a serialize), and **remote** storage (survives anything,
+costs the paper's 500 Mb/s link).  Each tier here pairs a container with
+the :class:`~repro.core.walltime.TierSpec` that prices it, so recovery
+wall-clock is computed from the tier actually serving the restore instead
+of a flat per-strategy constant.
+
+``MemoryTier`` additionally models *placement*: every snapshot is pinned
+to a host (a pipeline-stage index), and :meth:`drop_host` wipes everything
+that host held — exactly what a node failure does to in-memory replicas
+(FFTrainer's failure mode).
+"""
+from __future__ import annotations
+
+import os
+import re
+import threading
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.walltime import TierSpec
+from repro.statestore.codec import CodecError, Snapshot, decode, encode
+
+
+class TierError(RuntimeError):
+    """A tier operation failed (missing key, blob over capacity...)."""
+
+
+class StorageTier:
+    """Interface + shared pricing.  Keys are ``(shard_id, step)`` pairs."""
+
+    kind = "abstract"
+
+    def __init__(self, spec: TierSpec):
+        self.spec = spec
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    # ---- pricing ------------------------------------------------------
+    def read_time_s(self, nbytes: float) -> float:
+        return self.spec.read_time_s(nbytes)
+
+    def write_time_s(self, nbytes: float) -> float:
+        return self.spec.write_time_s(nbytes)
+
+    # ---- container contract ------------------------------------------
+    def put(self, snap: Snapshot, host: Optional[int] = None) -> None:
+        raise NotImplementedError
+
+    def get(self, shard_id: str, step: int) -> Snapshot:
+        raise NotImplementedError
+
+    def delete(self, shard_id: str, step: int) -> None:
+        raise NotImplementedError
+
+    def steps(self, shard_id: str) -> List[int]:
+        """Steps available for ``shard_id``, ascending."""
+        raise NotImplementedError
+
+    def has(self, shard_id: str, step: int) -> bool:
+        return step in self.steps(shard_id)
+
+    def used_bytes(self) -> int:
+        raise NotImplementedError
+
+    def drop_host(self, host: int) -> int:
+        """Forget everything placed on ``host``; returns #snapshots lost.
+        Only meaningful for memory tiers (disk survives its host here)."""
+        return 0
+
+    def __repr__(self) -> str:
+        return (f"{type(self).__name__}({self.name!r}, "
+                f"used={self.used_bytes()}B)")
+
+
+class MemoryTier(StorageTier):
+    """Peer-host-memory tier: snapshots by reference, pinned to a host.
+
+    Capacity is enforced by evicting the oldest snapshots (insertion
+    order); a single snapshot larger than the tier raises.
+    """
+
+    kind = "memory"
+
+    def __init__(self, spec: TierSpec):
+        super().__init__(spec)
+        self._items: "OrderedDict[Tuple[str, int], Tuple[Snapshot, Optional[int]]]" = OrderedDict()
+
+    def put(self, snap: Snapshot, host: Optional[int] = None) -> None:
+        if snap.nbytes > self.spec.capacity_bytes:
+            raise TierError(
+                f"snapshot {snap.shard_id}@{snap.step} ({snap.nbytes}B) "
+                f"exceeds tier {self.name!r} capacity "
+                f"({self.spec.capacity_bytes}B)")
+        key = (snap.shard_id, snap.step)
+        self._items.pop(key, None)
+        self._items[key] = (snap, host)
+        while self.used_bytes() > self.spec.capacity_bytes:
+            self._items.popitem(last=False)
+
+    def get(self, shard_id: str, step: int) -> Snapshot:
+        try:
+            return self._items[(shard_id, step)][0]
+        except KeyError:
+            raise TierError(f"{shard_id}@{step} not in tier {self.name!r}") \
+                from None
+
+    def delete(self, shard_id: str, step: int) -> None:
+        self._items.pop((shard_id, step), None)
+
+    def steps(self, shard_id: str) -> List[int]:
+        return sorted(s for (sid, s) in self._items if sid == shard_id)
+
+    def used_bytes(self) -> int:
+        return sum(snap.nbytes for snap, _ in self._items.values())
+
+    def host_of(self, shard_id: str, step: int) -> Optional[int]:
+        entry = self._items.get((shard_id, step))
+        return entry[1] if entry else None
+
+    def drop_host(self, host: int) -> int:
+        doomed = [k for k, (_, h) in self._items.items() if h == host]
+        for k in doomed:
+            del self._items[k]
+        return len(doomed)
+
+
+class DiskTier(StorageTier):
+    """Local-disk tier: encoded snapshots as atomically-renamed files.
+
+    ``template`` controls the filename layout so the legacy checkpoint
+    directory format (``ckpt_<step>.npz``, implicit shard "full") can be
+    served by the same tier as the sharded store layout
+    (``<shard>-<step>.npz``).  Interrupted writes leave ``*.tmp`` files
+    that are swept on startup (:meth:`clean_stale_tmp`) and never match
+    the step-listing pattern, so a crashed save can never corrupt
+    ``latest_step``-style queries.
+    """
+
+    kind = "disk"
+    TMP_SUFFIX = ".tmp"
+
+    def __init__(self, spec: TierSpec, directory: str,
+                 template: str = "{shard}-{step:08d}.npz"):
+        super().__init__(spec)
+        self.dir = directory
+        self.template = template
+        pattern = (re.escape(template)
+                   .replace(re.escape("{shard}"), r"(?P<shard>[\w.]+)")
+                   .replace(re.escape("{step:08d}"), r"(?P<step>\d{8})"))
+        self._pattern = re.compile(pattern + "$")
+        self._lock = threading.Lock()
+        #: tmp leftovers from interrupted saves swept at startup
+        self.cleaned_on_init: List[str] = (
+            self.clean_stale_tmp() if os.path.isdir(directory) else [])
+
+    # ---- filenames ----------------------------------------------------
+    def _path(self, shard_id: str, step: int) -> str:
+        name = self.template.format(shard=shard_id, step=step)
+        return os.path.join(self.dir, name)
+
+    def _listing(self) -> List[Tuple[str, int, str]]:
+        if not os.path.isdir(self.dir):
+            return []
+        out = []
+        for f in os.listdir(self.dir):
+            m = self._pattern.match(f)
+            if m:
+                groups = m.groupdict()
+                out.append((groups.get("shard", "full"),
+                            int(groups["step"]), f))
+        return out
+
+    def clean_stale_tmp(self) -> List[str]:
+        """Remove leftover ``*.tmp`` files from interrupted saves."""
+        removed = []
+        if not os.path.isdir(self.dir):
+            return removed
+        for f in os.listdir(self.dir):
+            # covers this tier's "<name>.npz.tmp" and the legacy
+            # checkpointer's "<name>.npz.tmp.npz" leftovers alike
+            if self.TMP_SUFFIX in f and not self._pattern.match(f):
+                os.remove(os.path.join(self.dir, f))
+                removed.append(f)
+        return removed
+
+    # ---- container contract ------------------------------------------
+    def put(self, snap: Snapshot, host: Optional[int] = None) -> None:
+        blob = encode(snap)
+        if len(blob) > self.spec.capacity_bytes:
+            raise TierError(
+                f"snapshot {snap.shard_id}@{snap.step} exceeds tier "
+                f"{self.name!r} capacity")
+        with self._lock:
+            os.makedirs(self.dir, exist_ok=True)
+            path = self._path(snap.shard_id, snap.step)
+            tmp = path + self.TMP_SUFFIX
+            with open(tmp, "wb") as f:
+                f.write(blob)
+            os.replace(tmp, path)
+
+    def get(self, shard_id: str, step: int) -> Snapshot:
+        path = self._path(shard_id, step)
+        if not os.path.exists(path):
+            raise TierError(f"{shard_id}@{step} not in tier {self.name!r} "
+                            f"({path} missing)")
+        with open(path, "rb") as f:
+            blob = f.read()
+        snap = decode(blob)  # raises CodecError on corruption
+        # trust the filename over the manifest (files can be renamed)
+        snap.shard_id, snap.step = shard_id, step
+        return snap
+
+    def delete(self, shard_id: str, step: int) -> None:
+        with self._lock:
+            path = self._path(shard_id, step)
+            if os.path.exists(path):
+                os.remove(path)
+
+    def steps(self, shard_id: str) -> List[int]:
+        return sorted(s for sid, s, _ in self._listing() if sid == shard_id)
+
+    def used_bytes(self) -> int:
+        if not os.path.isdir(self.dir):
+            return 0
+        return sum(os.path.getsize(os.path.join(self.dir, f))
+                   for _, _, f in self._listing())
+
+
+class RemoteTier(DiskTier):
+    """"Remote" storage: same mechanics as :class:`DiskTier` (this
+    container has no object store), priced with remote latency/bandwidth —
+    the paper's 500 Mb/s non-faulty storage link."""
+
+    kind = "remote"

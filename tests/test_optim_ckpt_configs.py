@@ -6,7 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.ckpt.checkpoint import (Checkpointer, latest_step,
+from repro.ckpt.checkpoint import (CheckpointError, Checkpointer,
+                                   clean_stale_tmp, latest_step,
                                    load_checkpoint, save_checkpoint)
 from repro.config import OptimizerConfig
 from repro.configs import ARCHS, arch_ids, get_config, get_stages, reduced
@@ -98,6 +99,85 @@ def test_checkpointer_no_checkpoint_raises(tmp_path):
     ck = Checkpointer(str(tmp_path), every=5)
     with pytest.raises(RuntimeError):
         ck.rollback(3, {"w": jnp.zeros(())})
+
+
+def test_checkpoint_bf16_roundtrip(tmp_path):
+    """bf16 leaves must come back as bf16 bit-exactly (np.savez alone
+    degrades them to |V2 void records)."""
+    tree = {"w": jnp.linspace(-3, 3, 16, dtype=jnp.bfloat16),
+            "b": jnp.ones((4,), jnp.float32)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    _, loaded = load_checkpoint(str(tmp_path), tree)
+    got = np.asarray(loaded["w"])
+    want = np.asarray(tree["w"])
+    assert got.dtype == want.dtype
+    assert got.tobytes() == want.tobytes()
+
+
+def test_load_checkpoint_real_exceptions(tmp_path):
+    """Missing/corrupted/mismatched checkpoints raise CheckpointError even
+    under ``python -O`` (no bare asserts)."""
+    tpl = {"w": jnp.zeros((3,), jnp.float32)}
+    with pytest.raises(CheckpointError, match="no checkpoints"):
+        load_checkpoint(str(tmp_path), tpl)
+    save_checkpoint(str(tmp_path), 2, tpl)
+    with pytest.raises(CheckpointError, match="step 5"):
+        load_checkpoint(str(tmp_path), tpl, step=5)
+    # corrupted file
+    (tmp_path / "ckpt_00000002.npz").write_bytes(b"not an npz")
+    with pytest.raises(CheckpointError):
+        load_checkpoint(str(tmp_path), tpl, step=2)
+    # shape mismatch against the template
+    save_checkpoint(str(tmp_path), 3, {"w": jnp.zeros((4,), jnp.float32)})
+    with pytest.raises(CheckpointError):
+        load_checkpoint(str(tmp_path), tpl, step=3)
+
+
+def test_rollback_recovers_from_corrupted_latest(tmp_path):
+    """A partially-written/corrupted newest checkpoint must not strand the
+    older intact one: rollback falls back instead of dying."""
+    ck = Checkpointer(str(tmp_path), every=1, keep=3)
+    tpl = {"w": jnp.zeros((3,))}
+    ck.maybe_save(1, {"w": jnp.full((3,), 1.0)})
+    ck.maybe_save(2, {"w": jnp.full((3,), 2.0)})
+    (tmp_path / "ckpt_00000002.npz").write_bytes(b"truncated garbage")
+    with pytest.warns(RuntimeWarning, match="skipping"):
+        step, tree, lost = ck.rollback(4, tpl)
+    assert step == 1 and lost == 3
+    np.testing.assert_allclose(np.asarray(tree["w"]), 1.0)
+
+
+def test_interrupted_save_never_corrupts_latest_step(tmp_path):
+    """Leftover tmp files from a crashed save are invisible to latest_step
+    and are swept on startup."""
+    tpl = {"w": jnp.zeros((2,), jnp.float32)}
+    save_checkpoint(str(tmp_path), 4, tpl)
+    # simulate saves interrupted mid-write, in both tmp conventions
+    (tmp_path / "ckpt_00000009.npz.tmp").write_bytes(b"half a snapshot")
+    (tmp_path / "ckpt_00000012.npz.tmp.npz").write_bytes(b"legacy tmp")
+    assert latest_step(str(tmp_path)) == 4
+    removed = clean_stale_tmp(str(tmp_path))
+    assert sorted(removed) == ["ckpt_00000009.npz.tmp",
+                               "ckpt_00000012.npz.tmp.npz"]
+    assert latest_step(str(tmp_path)) == 4
+    step, loaded = load_checkpoint(str(tmp_path), tpl)
+    assert step == 4
+
+
+def test_legacy_checkpoint_format_still_loads(tmp_path):
+    """Pre-statestore checkpoints (typed leaf_<i> arrays, no manifest)
+    load through the shim — including bf16 leaves the old writer stored
+    as raw void records."""
+    tpl = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+           "b": jnp.linspace(0, 1, 8, dtype=jnp.bfloat16)}
+    leaves = jax.tree.leaves(tpl)
+    np.savez(str(tmp_path / "ckpt_00000003.npz"),
+             **{f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)})
+    step, loaded = load_checkpoint(str(tmp_path), tpl)
+    assert step == 3
+    for x, y in zip(jax.tree.leaves(tpl), jax.tree.leaves(loaded)):
+        assert np.asarray(y).dtype == np.asarray(x).dtype
+        assert np.asarray(y).tobytes() == np.asarray(x).tobytes()
 
 
 # ---------------------------------------------------------------------------

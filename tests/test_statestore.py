@@ -1,0 +1,382 @@
+"""Tests for ``repro.statestore``: the dtype-preserving codec, the tier
+containers, async snapshots, the tiered store's restore semantics, and the
+two store-backed recovery strategies (``tiered_ckpt`` / ``neighbor``)
+end-to-end through the trainer."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import (ModelConfig, OptimizerConfig, RecoveryConfig,
+                          TrainConfig)
+from repro.configs import arch_ids, get_config
+from repro.core.stages import StagePartition
+from repro.core.state import History, TrainState
+from repro.core.trainer import Trainer
+from repro.core.walltime import WallClockModel
+from repro.data.pipeline import make_batches
+from repro.models.model import build_model
+from repro.optim.adam import init_adam
+from repro.recovery import FailureContext, make_strategy
+from repro.statestore import (AsyncSnapshotter, CodecError, DiskTier,
+                              MemoryTier, RetentionPolicy, Snapshot,
+                              SnapshotWriteError, StateStore, StoreError,
+                              TierError, decode, encode, host_snapshot,
+                              snapshot_to_tree)
+
+SPECS = WallClockModel().tier_specs()
+
+CFG = ModelConfig(
+    name="ss-llama", arch_type="dense", num_layers=4, d_model=32,
+    num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=128, max_seq_len=32,
+    dtype="float32", param_dtype="float32")
+STAGES = 4
+
+
+class ForcedSchedule:
+    def __init__(self, events):
+        self._events = dict(events)
+
+    def at(self, step):
+        return self._events.get(step, [])
+
+
+def make_trainer(rcfg, steps=8, events=None):
+    tcfg = TrainConfig(global_batch=4, microbatch=4, seq_len=32, steps=steps,
+                       eval_every=100,
+                       optimizer=OptimizerConfig(lr=1e-3, total_steps=steps,
+                                                 warmup_steps=2),
+                       recovery=rcfg)
+    sched = ForcedSchedule(events) if events else None
+    return Trainer(build_model(CFG), tcfg, schedule=sched)
+
+
+def batches():
+    return make_batches(CFG, batch=4, seq=32, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# codec: dtype preservation (satellite — bf16 round-trips bit-exactly)
+# ---------------------------------------------------------------------------
+
+def _config_dtypes():
+    """Every dtype any registered model config trains with, plus the
+    extended set a future config could pick up."""
+    names = set()
+    for a in arch_ids():
+        cfg = get_config(a)
+        names.update({cfg.dtype, cfg.param_dtype})
+    names.update({"bfloat16", "float16", "float32", "int32", "int8",
+                  "uint16", "bool"})
+    return sorted(names)
+
+
+@pytest.mark.parametrize("dtype_name", _config_dtypes())
+def test_codec_roundtrip_preserves_dtype(dtype_name):
+    """Property test over all model configs' param dtypes: encode/decode is
+    bit-exact and never upcasts or voids the dtype (np.savez alone stores
+    bf16 as |V2)."""
+    from repro.statestore.codec import _resolve_dtype
+    rng = np.random.default_rng(abs(hash(dtype_name)) % 2**31)
+    dtype = _resolve_dtype(dtype_name)
+    for shape in [(3,), (2, 5), (1, 2, 3), ()]:
+        raw = np.abs(rng.standard_normal(shape)) * 3
+        arr = jnp.asarray(raw).astype(dtype)
+        tree = {"leaf": arr, "nested": {"x": arr * 0}}
+        snap = host_snapshot(tree, step=1, shard_id="full")
+        back = snapshot_to_tree(decode(encode(snap)), tree)
+        got = np.asarray(back["leaf"])
+        assert got.dtype == np.asarray(arr).dtype, (dtype_name, shape)
+        assert got.tobytes() == np.asarray(arr).tobytes(), (dtype_name, shape)
+
+
+def test_codec_template_mismatch_raises():
+    tree = {"a": jnp.ones((2, 3), jnp.float32)}
+    snap = decode(encode(host_snapshot(tree, step=0, shard_id="full")))
+    with pytest.raises(CodecError, match="shape"):
+        snapshot_to_tree(snap, {"a": jnp.ones((3, 2), jnp.float32)})
+    with pytest.raises(CodecError, match="dtype"):
+        snapshot_to_tree(snap, {"a": jnp.ones((2, 3), jnp.int32)})
+    with pytest.raises(CodecError, match="leaves"):
+        snapshot_to_tree(snap, {"a": jnp.ones((2, 3)), "b": jnp.ones(())})
+
+
+def test_codec_rejects_garbage_and_truncation():
+    with pytest.raises(CodecError):
+        decode(b"this is not an npz file")
+    blob = encode(host_snapshot({"a": jnp.arange(4.0)}, step=0,
+                                shard_id="full"))
+    with pytest.raises(CodecError):
+        decode(blob[: len(blob) // 2])
+
+
+# ---------------------------------------------------------------------------
+# tiers
+# ---------------------------------------------------------------------------
+
+def _snap(shard_id, step, n=4, fill=1.0):
+    return host_snapshot({"w": jnp.full((n,), fill, jnp.float32)},
+                         step=step, shard_id=shard_id)
+
+
+def test_memory_tier_placement_and_drop_host():
+    tier = MemoryTier(SPECS["mem"])
+    tier.put(_snap("stage00", 1), host=1)
+    tier.put(_snap("stage01", 1), host=2)
+    assert tier.steps("stage00") == [1]
+    assert tier.drop_host(1) == 1
+    assert tier.steps("stage00") == []
+    assert tier.steps("stage01") == [1]        # other hosts untouched
+    with pytest.raises(TierError):
+        tier.get("stage00", 1)
+
+
+def test_memory_tier_capacity_eviction():
+    from repro.core.walltime import TierSpec
+    small = TierSpec("mem", "memory", capacity_bytes=40, latency_s=0,
+                     bandwidth_Bps=float("inf"))
+    tier = MemoryTier(small)
+    tier.put(_snap("s", 1))                     # 16 bytes each
+    tier.put(_snap("s", 2))
+    tier.put(_snap("s", 3))                     # evicts step 1
+    assert tier.steps("s") == [2, 3]
+    with pytest.raises(TierError, match="capacity"):
+        tier.put(_snap("s", 4, n=100))
+
+
+def test_disk_tier_roundtrip_and_listing(tmp_path):
+    tier = DiskTier(SPECS["disk"], str(tmp_path))
+    tier.put(_snap("stage00", 5, fill=5.0))
+    tier.put(_snap("stage00", 7, fill=7.0))
+    tier.put(_snap("stage01", 7))
+    assert tier.steps("stage00") == [5, 7]
+    got = tier.get("stage00", 5)
+    np.testing.assert_allclose(got.leaves[0], 5.0)
+    tier.delete("stage00", 5)
+    assert tier.steps("stage00") == [7]
+    assert tier.used_bytes() > 0
+
+
+def test_disk_tier_cleans_stale_tmp_on_startup(tmp_path):
+    tier = DiskTier(SPECS["disk"], str(tmp_path))
+    tier.put(_snap("stage00", 3))
+    # an interrupted write leaves a temp file behind
+    stale = tmp_path / "stage00-00000009.npz.tmp"
+    stale.write_bytes(b"partial garbage")
+    tier2 = DiskTier(SPECS["disk"], str(tmp_path))
+    assert not stale.exists()
+    assert tier2.steps("stage00") == [3]        # tmp never counted as a step
+
+
+def test_retention_policy(tmp_path):
+    tier = DiskTier(SPECS["disk"], str(tmp_path))
+    policy = RetentionPolicy(keep={"disk": 2})
+    for s in range(1, 6):
+        tier.put(_snap("s", s))
+        policy.apply(tier, "s")
+    assert tier.steps("s") == [4, 5]
+
+
+def test_tier_pricing_monotone():
+    mem, disk, remote = SPECS["mem"], SPECS["disk"], SPECS["remote"]
+    nbytes = 1e9
+    assert mem.read_time_s(nbytes) < disk.read_time_s(nbytes) \
+        < remote.read_time_s(nbytes)
+
+
+# ---------------------------------------------------------------------------
+# async snapshotter
+# ---------------------------------------------------------------------------
+
+def test_async_snapshotter_flush_and_order():
+    snapper = AsyncSnapshotter(depth=2)
+    done = []
+    for i in range(5):
+        snapper.submit(lambda i=i: done.append(i))
+    snapper.flush()
+    assert done == [0, 1, 2, 3, 4]
+    snapper.close()
+
+
+def test_async_snapshotter_propagates_errors():
+    snapper = AsyncSnapshotter(depth=2)
+
+    def boom():
+        raise IOError("disk full")
+
+    snapper.submit(boom)
+    with pytest.raises(SnapshotWriteError, match="disk full"):
+        snapper.flush()
+    snapper.close()
+
+
+# ---------------------------------------------------------------------------
+# store: freshest-step-wins, corruption fallback
+# ---------------------------------------------------------------------------
+
+def test_store_serves_freshest_from_fastest(tmp_path):
+    store = StateStore([MemoryTier(SPECS["mem"]),
+                        DiskTier(SPECS["disk"], str(tmp_path))])
+    tpl = {"w": jnp.zeros((4,), jnp.float32)}
+    store.put({"w": jnp.full((4,), 3.0)}, step=3, shard_id="s", tier="disk")
+    store.put({"w": jnp.full((4,), 5.0)}, step=5, shard_id="s", tier="mem",
+              host=0)
+    res = store.restore("s", tpl)
+    assert (res.step, res.tier) == (5, "mem")
+    np.testing.assert_allclose(np.asarray(res.tree["w"]), 5.0)
+    # freshness beats tier speed: newer disk copy wins over older mem copy
+    store.put({"w": jnp.full((4,), 9.0)}, step=9, shard_id="s", tier="disk")
+    res = store.restore("s", tpl)
+    assert (res.step, res.tier) == (9, "disk")
+    assert res.read_time_s > 0
+    store.close()
+
+
+def test_store_skips_corrupted_snapshot(tmp_path):
+    store = StateStore([DiskTier(SPECS["disk"], str(tmp_path))])
+    tpl = {"w": jnp.zeros((4,), jnp.float32)}
+    store.put({"w": jnp.full((4,), 1.0)}, step=1, shard_id="s", tier="disk",
+              sync=True)
+    store.put({"w": jnp.full((4,), 2.0)}, step=2, shard_id="s", tier="disk",
+              sync=True)
+    # corrupt the newest file in place
+    (tmp_path / "s-00000002.npz").write_bytes(b"garbage" * 10)
+    with pytest.warns(RuntimeWarning, match="skipping"):
+        res = store.restore("s", tpl)
+    assert res.step == 1
+    store.close()
+
+
+def test_store_raises_when_empty(tmp_path):
+    store = StateStore([DiskTier(SPECS["disk"], str(tmp_path))])
+    with pytest.raises(StoreError):
+        store.restore("nothing", {"w": jnp.zeros(())})
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# strategies: tiered_ckpt hot restore is bit-identical (satellite)
+# ---------------------------------------------------------------------------
+
+def _bound_strategy(name, tmp_path, **rcfg_kw):
+    rcfg = RecoveryConfig(strategy=name, num_stages=STAGES,
+                          store_dir=str(tmp_path / "store"),
+                          protect_edge_stages=False, **rcfg_kw)
+    s = make_strategy(rcfg)
+    part = StagePartition(CFG, STAGES)
+    model = build_model(CFG)
+
+    def init_fn():
+        params = model.init(jax.random.PRNGKey(0))
+        return params, init_adam(params)
+
+    s.bind(part, init_fn=init_fn)
+    return s, part, init_fn
+
+
+def test_tiered_hot_restore_bit_identical_unit(tmp_path):
+    """after_step snapshots, then a mutated state fails: the restored stage
+    must be byte-for-byte the snapshotted params, not an approximation."""
+    s, part, init_fn = _bound_strategy("tiered_ckpt", tmp_path)
+    params, opt = init_fn()
+    state = TrainState(params, opt, effective_step=5)
+    s.after_step(state, History())
+    # training moves on: every stage drifts
+    drifted = jax.tree.map(lambda a: a + 0.25, params)
+    state2 = TrainState(drifted, opt, effective_step=6)
+    hist = History()
+    event = FailureContext(stage=2, wall_step=6, key=jax.random.PRNGKey(1),
+                           hist=hist)
+    restored = s.on_failure(state2, event)
+    want = np.asarray(part.get_stage(params, 2)["attn"]["wq"])
+    got = np.asarray(part.get_stage(restored.params, 2)["attn"]["wq"])
+    assert got.tobytes() == want.tobytes()      # bit-identical, hot tier
+    assert s.restore_log[-1][3] == "mem"
+    # untouched stages keep the drifted values
+    np.testing.assert_allclose(
+        np.asarray(part.get_stage(restored.params, 1)["attn"]["wq"]),
+        np.asarray(part.get_stage(drifted, 1)["attn"]["wq"]))
+    s.on_run_end()
+
+
+def test_tiered_e2e_stage_failure_restores_from_hot_tier(tmp_path):
+    """Deterministic end-to-end: mid-training failure under tiered_ckpt is
+    served by the memory tier at zero recovery error."""
+    rcfg = RecoveryConfig(strategy="tiered_ckpt", num_stages=STAGES,
+                          checkpoint_every=4,
+                          store_dir=str(tmp_path / "store"),
+                          protect_edge_stages=False)
+    tr = make_trainer(rcfg, steps=8, events={3: [1], 6: [2]})
+    state, hist = tr.run(batches())
+    assert [(w, s) for w, s in hist.failures] == [(3, 1), (6, 2)]
+    assert [t for _, _, _, t in tr.strategy.restore_log] == ["mem", "mem"]
+    # hot-tier restore of the current step: exactly zero recovery error
+    assert all(err == 0.0 for _, err in hist.recovery_errors)
+    assert not hist.truncated and state.effective_step == 8
+
+
+def test_neighbor_survives_replica_holder_failure(tmp_path):
+    """The FFTrainer failure mode: stage i and its replica holder (i+1) die
+    together.  Stage i's in-memory replica is gone — the store must fall
+    back to the next tier (the disk safety net) instead of failing."""
+    rcfg = RecoveryConfig(strategy="neighbor", num_stages=STAGES,
+                          checkpoint_every=2,
+                          store_dir=str(tmp_path / "store"),
+                          protect_edge_stages=False)
+    tr = make_trainer(rcfg, steps=8, events={5: [1, 2]})
+    state, hist = tr.run(batches())
+    served = {stage: tier for _, stage, _, tier in tr.strategy.restore_log}
+    # stage 1's replica lived on dead stage 2 -> disk; stage 2's replica
+    # lived on surviving stage 3 -> memory
+    assert served == {1: "disk", 2: "mem"}
+    assert not hist.truncated and state.effective_step == 8
+
+
+def test_neighbor_without_cold_tier_reinits_on_double_failure(tmp_path):
+    """Pure FFTrainer (no disk safety net): losing a shard and its replica
+    host falls back to a fresh reinit of that stage, not a crash."""
+    rcfg = RecoveryConfig(strategy="neighbor", num_stages=STAGES,
+                          neighbor_cold=False,
+                          store_dir=str(tmp_path / "store"),
+                          protect_edge_stages=False)
+    tr = make_trainer(rcfg, steps=8, events={5: [1, 2]})
+    state, hist = tr.run(batches())
+    served = {stage: tier for _, stage, _, tier in tr.strategy.restore_log}
+    assert served == {1: "init", 2: "mem"}
+    assert not hist.truncated
+
+
+def test_statestore_strategy_costs_priced_by_tiers():
+    """Recovery wall-clock comes from tier specs, not flat constants."""
+    wall = WallClockModel()
+    tiered = make_strategy(RecoveryConfig(strategy="tiered_ckpt"), wall=wall)
+    neigh = make_strategy(RecoveryConfig(strategy="neighbor"), wall=wall)
+    ckpt = make_strategy(RecoveryConfig(strategy="checkpoint"), wall=wall)
+    # both replicate every step -> dearer nominal iteration than bare
+    assert tiered.iteration_cost() > wall.iter_time_s
+    assert neigh.iteration_cost() > wall.iter_time_s
+    # a hot stage-shard read is orders cheaper than a full remote rollback
+    assert tiered.failure_cost() < ckpt.failure_cost()
+    mem = wall.tier_specs()["mem"]
+    expected = mem.read_time_s(wall.stage_bytes(4))
+    assert tiered.failure_cost() == pytest.approx(expected)
+
+
+def test_sim_failure_overhead_reprices_with_actual_bytes():
+    """The simulator's bandwidth/restart hook accepts the strategy's actual
+    restored bytes and reprices the transfer per event."""
+    from repro.sim import simulate
+    sched = simulate("paper_10pct", steps=400, seed=7, num_stages=6,
+                     protect_edges=False)
+    assert len(sched.events) >= 1
+    ev = sched.events[0]
+    default = sched.failure_overhead(ev.step, ev.stage)
+    tiny = sched.failure_overhead(ev.step, ev.stage, 1.0)
+    big = sched.failure_overhead(ev.step, ev.stage, 1e12)
+    assert tiny < default < big
+    # non-event steps stay free either way
+    assert sched.failure_overhead(10**9, 0) == 0.0
+    assert sched.failure_overhead(10**9, 0, 123.0) == 0.0
