@@ -108,7 +108,7 @@ def run_strategy(*, strategy: str, rate: Optional[float] = None,
         rate = 0.10  # the legacy schedule's long-standing default
     kw = dict(strategy=strategy, rate=rate, scenario=scenario, steps=steps,
               seed=seed, ckpt_every=ckpt_every, failure_seed=failure_seed,
-              lr=lr, model=BENCH_MODEL.name, stages=BENCH_STAGES, v=7)
+              lr=lr, model=BENCH_MODEL.name, stages=BENCH_STAGES, v=8)
     if scenario is not None and scenario.startswith("trace:"):
         # key the cache on the trace *contents*: editing the file must miss
         from repro.sim import resolve_trace_path

@@ -148,8 +148,9 @@ class Checkpointer:
     """
 
     SHARD = "full"
+    DEFAULT_KEEP = 3
 
-    def __init__(self, directory: str, every: int, keep: int = 3):
+    def __init__(self, directory: str, every: int, keep: int = DEFAULT_KEEP):
         self.dir = directory
         self.every = max(every, 1)
         self.keep = keep

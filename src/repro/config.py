@@ -257,6 +257,11 @@ class TrainConfig:
     log_every: int = 10
     eval_every: int = 50
     eval_batches: int = 4
+    fuse_window: int = 8      # max iterations fused into one on-device
+                              # lax.scan window (1 = eager per-step loop);
+                              # the trainer buckets actual windows to powers
+                              # of two and breaks at failures, eval points,
+                              # and the strategy's after_step_horizon
     seed: int = 0
     optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
     recovery: RecoveryConfig = field(default_factory=RecoveryConfig)

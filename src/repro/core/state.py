@@ -31,5 +31,10 @@ class History:
     failures: List[Tuple[int, int]] = field(default_factory=list)
     recovery_errors: List[Tuple[int, float]] = field(default_factory=list)
     wall_iters: int = 0
+    dispatches: int = 0          # fused-window device dispatches; the eager
+                                 # loop has dispatches == wall_iters, the
+                                 # fused hot path amortizes K steps per
+                                 # dispatch (wall_iters / dispatches ~ mean
+                                 # window size)
     truncated: bool = False      # hit the trainer's max_wall safety bound
                                  # before reaching the target step count

@@ -1,5 +1,5 @@
 """Failure-aware trainer: the paper's training loop with pluggable recovery
-strategies.
+strategies, executed through a fused multi-step hot path.
 
 The trainer executes *wall iterations*; a :class:`~repro.recovery.base.
 RecoveryStrategy` (constructed from ``RecoveryConfig`` via the registry)
@@ -11,6 +11,24 @@ lifecycle hooks and capability flags, never its name.  CheckFree+'s
 out-of-order microbatches are realized by computing half the batch through a
 swapped stage order (a static layer-index gather — see core/swap.py).
 
+**Fused hot path.**  The failure schedule is deterministic and queryable
+ahead of time (``schedule.at(step)``), so between failure events the
+trainer knows it will run K uninterrupted steps.  It fuses them into a
+single jitted ``lax.scan`` over a stacked batch window: one dispatch, zero
+per-step host round-trips.  Per-step metrics (loss, per-stage grad
+square-norms, lr) accumulate on device in the scan's output ring and are
+drained with one ``device_get`` at window boundaries — failure events,
+eval points, strategy ``after_step_horizon`` limits, and run end.  Window
+size 1 runs the *same* scan executable with a length-1 leading axis, so
+eager and fused traces are bit-identical by construction.  Params and
+optimizer state are donated to the step (``donate_argnums``), so on
+backends with real donation Adam's moments update in place instead of
+being copied every iteration (CPU ignores donation; the jit warning is
+silenced below).  The next window's batches are stacked on a background
+thread (:class:`~repro.data.pipeline.WindowPrefetcher`) while the current
+window runs, and the replay cache is bounded by the strategy's
+``replay_horizon()``.  See ``docs/perf.md``.
+
 The ``schedule`` may be the legacy seeded :class:`FailureSchedule` or a
 simulated cluster's ``SimFailureSchedule`` (``repro.sim``): when the
 schedule exposes the per-event wall-clock hooks (``iteration_factor`` /
@@ -21,19 +39,22 @@ receives the cluster's failure-rate telemetry each wall iteration.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import warnings
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ModelConfig, OptimizerConfig, RecoveryConfig, TrainConfig
+from repro.config import OptimizerConfig, TrainConfig
 from repro.core.failures import FailureSchedule
 from repro.core.stages import StagePartition
 from repro.core.state import History, TrainState  # noqa: F401  (re-export)
 from repro.core.swap import swap_permutation
 from repro.core.walltime import WallClockModel
+from repro.data.pipeline import WindowPrefetcher
+from repro.models.layers import cross_entropy
 from repro.models.model import Model
 from repro.optim.adam import adam_update, init_adam
 from repro.recovery import FailureContext, RecoveryStrategy, make_strategy
@@ -48,14 +69,9 @@ def _permute_tower(params: Params, tower_key: str, idx: jnp.ndarray) -> Params:
     return out
 
 
-def make_train_step(model: Model, opt_cfg: OptimizerConfig,
-                    part: StagePartition, *, use_swap: bool = False,
-                    ) -> Callable:
-    """Build the jitted train step.
-
-    With ``use_swap`` (CheckFree+), the batch is split in half: the first half
-    runs the normal stage order, the second half the swapped order.
-    """
+def _make_loss_fn(model: Model, part: StagePartition, use_swap: bool,
+                  ) -> Callable:
+    """The (possibly swap-scheduled) loss closure shared by every step."""
     tower_key = part.tower_key
     if use_swap:
         perm = jnp.asarray(swap_permutation(part.num_layers, part.num_stages))
@@ -71,19 +87,95 @@ def make_train_step(model: Model, opt_cfg: OptimizerConfig,
         l2, _ = model.loss(_permute_tower(params, tower_key, perm), second)
         return 0.5 * (l1 + l2), m1
 
-    @jax.jit
+    return loss_fn
+
+
+def _jit_donated(fn):
+    """jit with params/opt_state (argnums 0, 1) donated: on backends with
+    donation support Adam's moments update in place instead of being copied
+    every step; elsewhere (CPU) donation is a no-op that warns once per
+    compile.  That warning is suppressed *scoped to this dispatch only* —
+    the process-global filter is left alone so callers' own donation
+    misconfigurations still surface."""
+    jitted = jax.jit(fn, donate_argnums=(0, 1))
+
+    @functools.wraps(jitted)
+    def dispatch(*args):
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            return jitted(*args)
+
+    return dispatch
+
+
+def make_train_step(model: Model, opt_cfg: OptimizerConfig,
+                    part: StagePartition, *, use_swap: bool = False,
+                    ) -> Callable:
+    """Build the jitted single train step — the fused step at window 1.
+
+    With ``use_swap`` (CheckFree+), the batch is split in half: the first half
+    runs the normal stage order, the second half the swapped order.
+
+    NOTE: ``params`` and ``opt_state`` are **donated** — do not reuse them
+    after the call (on donating backends their buffers are consumed;
+    thread state linearly like the trainer does).
+    """
+    fused = make_fused_train_step(model, opt_cfg, part, use_swap=use_swap)
+
     def train_step(params, opt_state, batch, lr_scale):
-        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params, batch)
-        omegas = part.stage_grad_sqnorms(grads)
-        params, opt_state, opt_metrics = adam_update(
-            opt_cfg, params, grads, opt_state, lr_scale)
-        metrics = dict(metrics)
-        metrics.update(opt_metrics)
-        metrics["loss"] = loss
-        return params, opt_state, omegas, metrics
+        stacked = {k: jnp.asarray(v)[None] for k, v in batch.items()}
+        params, opt_state, _ls, ring = fused(params, opt_state, stacked,
+                                             lr_scale)
+        metrics = {k: v[0] for k, v in ring.items() if k != "omegas"}
+        return params, opt_state, ring["omegas"][0], metrics
 
     return train_step
+
+
+def make_fused_train_step(model: Model, opt_cfg: OptimizerConfig,
+                          part: StagePartition, *, use_swap: bool = False,
+                          lr_decay: float = 1.0) -> Callable:
+    """Build the fused K-step train step: a jitted ``lax.scan`` over a
+    stacked batch window.
+
+    ``fused(params, opt_state, stacked, lr_scale)`` runs one scan step per
+    leading-axis slice of ``stacked`` and returns
+    ``(params, opt_state, lr_scale, outs)`` where ``outs`` holds the
+    per-step metric rings — ``loss`` / ``omegas`` / ``grad_norm`` / ``lr``
+    plus the model's scalar metrics (``ce``, ``aux``) — with leading axis
+    K, still on device.  The CheckFree LR-boost decay
+    (``lr_scale -> 1 + (lr_scale - 1) * lr_decay``) is folded into the scan
+    carry so no host round-trip is needed between steps.  ``params`` and
+    ``opt_state`` are donated: on backends with donation support Adam's
+    moments update in place across the whole window.
+
+    The window size is purely the leading axis of ``stacked`` — K=1 runs
+    the identical scan body, which is what makes eager (window 1) and fused
+    (window K) loss traces bit-identical on the same backend.
+    """
+    loss_fn = _make_loss_fn(model, part, use_swap)
+
+    @_jit_donated
+    def fused_step(params, opt_state, stacked, lr_scale):
+        def body(carry, batch):
+            params, opt_state, ls = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            omegas = part.stage_grad_sqnorms(grads)
+            params, opt_state, opt_metrics = adam_update(
+                opt_cfg, params, grads, opt_state, ls)
+            ls_next = 1.0 + (ls - 1.0) * lr_decay
+            ring = dict(metrics)            # scalar model metrics (ce, aux)
+            ring.update(opt_metrics)        # grad_norm, lr
+            ring.update(loss=loss, omegas=omegas)
+            return (params, opt_state, ls_next), ring
+
+        carry0 = (params, opt_state, jnp.asarray(lr_scale, jnp.float32))
+        (params, opt_state, ls), outs = jax.lax.scan(body, carry0, stacked)
+        return params, opt_state, ls, outs
+
+    return fused_step
 
 
 def make_eval_step(model: Model) -> Callable:
@@ -92,9 +184,22 @@ def make_eval_step(model: Model) -> Callable:
         logits, aux = model.apply(params, batch)
         if model.cfg.arch_type == "vlm":
             logits = logits[:, batch["patches"].shape[1]:, :]
-        from repro.models.layers import cross_entropy
         return cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
     return eval_step
+
+
+def _window_buckets(cap: int) -> List[int]:
+    """Descending power-of-two window sizes <= cap (always ending in 1).
+
+    Every distinct window size is a separate XLA executable; bucketing the
+    schedule-derived distances to powers of two bounds compilation to
+    O(log cap) variants."""
+    buckets = []
+    k = 1
+    while k <= cap:
+        buckets.append(k)
+        k *= 2
+    return buckets[::-1]
 
 
 class Trainer:
@@ -122,10 +227,38 @@ class Trainer:
             return params, init_adam(params)
 
         self.strategy.bind(self.part, init_fn=fresh_init)
-        self.train_step = make_train_step(
+        self.fused_step = make_fused_train_step(
             model, tcfg.optimizer, self.part,
-            use_swap=self.strategy.uses_swap_schedule)
+            use_swap=self.strategy.uses_swap_schedule,
+            lr_decay=self.rcfg.lr_boost_decay)
         self.eval_step = make_eval_step(model)
+        self._buckets = _window_buckets(max(int(tcfg.fuse_window), 1))
+        self._eval_batches: Optional[List] = None
+
+    # ---- window sizing -------------------------------------------------
+    def _window_size(self, wall_step: int, effective_step: int,
+                     max_wall: int) -> int:
+        """Largest bucketed K such that steps [wall_step, wall_step+K) are
+        failure-free after the first, no interior step needs host state
+        (strategy horizon / eval), and the run doesn't overshoot."""
+        cap = self._buckets[0]
+        cap = min(cap, self.tcfg.steps - effective_step)
+        cap = min(cap, max_wall - wall_step)
+        horizon = self.strategy.after_step_horizon(effective_step)
+        if horizon is not None:
+            cap = min(cap, horizon)
+        if self._eval_batches:
+            ev = self.tcfg.eval_every
+            cap = min(cap, ev - effective_step % ev)
+        if self.schedule is not None:
+            for i in range(1, cap):
+                if self.schedule.at(wall_step + i):
+                    cap = i
+                    break
+        for k in self._buckets:
+            if k <= cap:
+                return k
+        return 1
 
     # ---- main loop ----------------------------------------------------
     def run(self, batches, eval_batches: Optional[List] = None,
@@ -137,32 +270,20 @@ class Trainer:
         state = TrainState(params, init_adam(params))
         hist = History()
         clock = 0.0
-        data_cache: Dict[int, Any] = {}
-
-        def batch_at(step: int):
-            # rollback replays the same data (deterministic stream)
-            while step not in data_cache:
-                data_cache[len(data_cache)] = next(batches)
-            return data_cache[step]
-
-        # per-event wall-clock hooks: a simulated cluster (repro.sim)
-        # stretches iterations by its slowest node and adds node-dependent
-        # recovery overheads; the legacy FailureSchedule has neither, so the
-        # constant per-strategy pricing stands unchanged
-        iter_factor = getattr(self.schedule, "iteration_factor", None)
-        failure_overhead = getattr(self.schedule, "failure_overhead", None)
-        observed_rate = getattr(self.schedule, "observed_rate", None)
+        self._eval_batches = [
+            {k: jnp.asarray(v) for k, v in eb.items()}
+            for eb in eval_batches] if eval_batches else None
+        self._prefetch = WindowPrefetcher(batches)
 
         wall_step = 0
         max_wall = tcfg.steps * 10  # safety bound for rollback-heavy runs
         try:
             state, hist, clock, wall_step = self._loop(
-                eval_batches, verbose, state, hist, clock,
-                wall_step, max_wall, batch_at,
-                iter_factor, failure_overhead, observed_rate, key)
+                verbose, state, hist, clock, wall_step, max_wall, key)
         finally:
-            # release background resources (async snapshot writers) even
-            # when the loop raises
+            # release background resources (async snapshot writers, the
+            # batch prefetcher) even when the loop raises
+            self._prefetch.close()
             strategy.on_run_end()
 
         hist.wall_iters = wall_step
@@ -177,83 +298,125 @@ class Trainer:
                 stacklevel=2)
         return state, hist
 
-    def _loop(self, eval_batches, verbose, state, hist, clock,
-              wall_step, max_wall, batch_at, iter_factor, failure_overhead,
-              observed_rate, key):
+    def _handle_failures(self, state: TrainState, hist: History,
+                         clock: float, wall_step: int, key,
+                         failure_overhead) -> Tuple[TrainState, float, Any]:
+        """Failures arrive at iteration boundaries; consecutive-stage runs
+        (beyond-paper, §6 future work) are recovered together when the
+        strategy advertises the capability."""
+        strategy = self.strategy
+        stages = sorted(self.schedule.at(wall_step))
+        runs: List[List[int]] = []
+        for stage in stages:
+            if runs and stage == runs[-1][-1] + 1:
+                runs[-1].append(stage)
+            else:
+                runs.append([stage])
+        for run in runs:
+            key, sub = jax.random.split(key)
+            event = FailureContext(stage=run[0], wall_step=wall_step,
+                                   key=sub, hist=hist)
+            if len(run) > 1 and strategy.handles_consecutive:
+                state = strategy.on_consecutive(state, run, event)
+            else:
+                for stage in run:
+                    state = strategy.on_failure(
+                        state, dataclasses.replace(event, stage=stage))
+            for stage in run:
+                hist.failures.append((wall_step, stage))
+                clock += strategy.failure_cost()
+                # store-backed strategies report the actual serialized
+                # bytes shipped to the replacement node; drained
+                # unconditionally (the per-event queue must stay in
+                # lockstep with failure_cost even when the schedule has no
+                # repricing hook)
+                nbytes = strategy.consume_restore_bytes()
+                if failure_overhead is not None:
+                    clock += (failure_overhead(wall_step, stage)
+                              if nbytes is None else
+                              failure_overhead(wall_step, stage, nbytes))
+        return state, clock, key
+
+    def _loop(self, verbose, state, hist, clock, wall_step, max_wall, key):
         tcfg = self.tcfg
         strategy = self.strategy
+
+        # per-event wall-clock hooks: a simulated cluster (repro.sim)
+        # stretches iterations by its slowest node and adds node-dependent
+        # recovery overheads; the legacy FailureSchedule has neither, so the
+        # constant per-strategy pricing stands unchanged
+        iter_factor = getattr(self.schedule, "iteration_factor", None)
+        failure_overhead = getattr(self.schedule, "failure_overhead", None)
+        observed_rate = getattr(self.schedule, "observed_rate", None)
+
+        replay = strategy.replay_horizon()
+
         while state.effective_step < tcfg.steps and wall_step < max_wall:
             # 0) environment telemetry (the simulator's observed failure
             #    rate) reaches the strategy before this iteration's events
             if observed_rate is not None:
                 strategy.observe_environment(observed_rate(wall_step))
 
-            # 1) failures arrive at iteration boundaries; consecutive-stage
-            #    runs (beyond-paper, §6 future work) are recovered together
-            #    when the strategy advertises the capability
+            # 1) failures at this boundary
             if self.schedule is not None:
-                stages = sorted(self.schedule.at(wall_step))
-                runs: List[List[int]] = []
-                for stage in stages:
-                    if runs and stage == runs[-1][-1] + 1:
-                        runs[-1].append(stage)
-                    else:
-                        runs.append([stage])
-                for run in runs:
-                    key, sub = jax.random.split(key)
-                    event = FailureContext(stage=run[0], wall_step=wall_step,
-                                           key=sub, hist=hist)
-                    if len(run) > 1 and strategy.handles_consecutive:
-                        state = strategy.on_consecutive(state, run, event)
-                    else:
-                        for stage in run:
-                            state = strategy.on_failure(
-                                state, dataclasses.replace(event, stage=stage))
-                    for stage in run:
-                        hist.failures.append((wall_step, stage))
-                        clock += strategy.failure_cost()
-                        # store-backed strategies report the actual
-                        # serialized bytes shipped to the replacement node;
-                        # drained unconditionally (the per-event queue must
-                        # stay in lockstep with failure_cost even when the
-                        # schedule has no repricing hook)
-                        nbytes = strategy.consume_restore_bytes()
-                        if failure_overhead is not None:
-                            clock += (failure_overhead(wall_step, stage)
-                                      if nbytes is None else
-                                      failure_overhead(wall_step, stage,
-                                                       nbytes))
+                state, clock, key = self._handle_failures(
+                    state, hist, clock, wall_step, key, failure_overhead)
 
-            # 2) one training iteration
-            batch = batch_at(state.effective_step)
-            jb = {k: jnp.asarray(v) for k, v in batch.items()}
-            params, opt_state, omegas, metrics = self.train_step(
-                state.params, state.opt_state, jb, state.lr_scale)
-            decay = self.rcfg.lr_boost_decay
-            new_scale = 1.0 + (state.lr_scale - 1.0) * decay
-            state = TrainState(params, opt_state, new_scale,
-                               np.asarray(omegas),
-                               state.effective_step + 1)
-            clock += strategy.iteration_cost() * (
-                iter_factor(wall_step) if iter_factor is not None else 1.0)
+            # 2) fused window: K steps, one dispatch, zero interior syncs
+            k = self._window_size(wall_step, state.effective_step, max_wall)
+            stacked = self._prefetch.take(state.effective_step, k)
+            params, opt_state, lr_scale, outs = self.fused_step(
+                state.params, state.opt_state,
+                {kk: jnp.asarray(v) for kk, v in stacked.items()},
+                state.lr_scale)
+            hist.dispatches += 1
 
-            # 3) strategy bookkeeping (checkpoint saves, adaptive windows...)
+            # while the device chews on this window, line up the next one
+            # (contiguous continuation — a failure at the boundary replays
+            # from the cache instead)
+            next_k = self._window_size(wall_step + k,
+                                       state.effective_step + k, max_wall)
+            if state.effective_step + k < tcfg.steps:
+                self._prefetch.prime(state.effective_step + k, next_k)
+
+            # 3) drain the window: ONE host sync for K steps of metrics
+            ring = jax.device_get(outs)
+            lr_scale = float(jax.device_get(lr_scale))
+            losses = ring["loss"]
+            state = TrainState(params, opt_state, lr_scale,
+                               ring["omegas"][-1],
+                               state.effective_step + k)
+
+            # 4) host-side bookkeeping, per wall iteration, in the exact
+            #    order the eager loop used (telemetry -> pricing -> hist)
+            for i in range(k):
+                if i > 0 and observed_rate is not None:
+                    strategy.observe_environment(
+                        observed_rate(wall_step + i))
+                clock += strategy.iteration_cost() * (
+                    iter_factor(wall_step + i)
+                    if iter_factor is not None else 1.0)
+                hist.steps.append(state.effective_step - k + i + 1)
+                hist.wall_time.append(clock)
+                hist.loss.append(float(losses[i]))
+
+            # 5) strategy bookkeeping on the drained state (checkpoint
+            #    saves, adaptive windows...); interior steps were certified
+            #    skippable by after_step_horizon
             strategy.after_step(state, hist)
+            if replay is not None:
+                self._prefetch.evict_below(state.effective_step - replay)
 
-            hist.steps.append(state.effective_step)
-            hist.wall_time.append(clock)
-            hist.loss.append(float(metrics["loss"]))
-            if eval_batches and state.effective_step % tcfg.eval_every == 0:
+            if self._eval_batches and \
+                    state.effective_step % tcfg.eval_every == 0:
                 el = float(np.mean([
-                    float(self.eval_step(state.params,
-                                         {k: jnp.asarray(v)
-                                          for k, v in eb.items()}))
-                    for eb in eval_batches]))
+                    float(self.eval_step(state.params, eb))
+                    for eb in self._eval_batches]))
                 hist.eval_loss.append((state.effective_step, clock, el))
                 if verbose:
                     print(f"  step {state.effective_step:4d} "
                           f"wall {clock/3600:7.2f}h loss "
-                          f"{metrics['loss']:.3f} eval {el:.3f}")
-            wall_step += 1
+                          f"{losses[-1]:.3f} eval {el:.3f}")
+            wall_step += k
 
         return state, hist, clock, wall_step

@@ -2,8 +2,14 @@
 
 ``interpret`` defaults to True (this container is CPU-only; on a real TPU
 deployment set ``REPRO_PALLAS_INTERPRET=0`` to run the compiled kernels).
-The wrappers also adapt the model-layer layouts ((B, S, H, D)) to the kernel
-layouts ((B, H, S, D)).
+The flag is read at call time, so flipping the environment variable inside
+a process (tests, benchmarks) takes effect without re-importing.  The
+compiled path is fully trainable: ``flash_attention`` carries a
+recompute-based custom VJP (see ``kernels/flash_attention.py``), so
+reverse-mode autodiff never needs the interpreter.
+
+The wrappers also adapt the model-layer layouts ((B, S, H, D)) to the
+kernel layouts ((B, H, S, D)).
 """
 from __future__ import annotations
 
@@ -15,11 +21,14 @@ from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.ssd_scan import ssd_scan as _ssd
 from repro.kernels.stage_merge import stage_merge as _merge
 
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+def interpret_default() -> bool:
+    """Whether kernels run in interpret mode (REPRO_PALLAS_INTERPRET != 0)."""
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
 
 def stage_merge(x: jnp.ndarray, y: jnp.ndarray, ca, cb) -> jnp.ndarray:
-    return _merge(x, y, ca, cb, interpret=INTERPRET)
+    return _merge(x, y, ca, cb, interpret=interpret_default())
 
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
@@ -30,7 +39,7 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     kt = jnp.swapaxes(k, 1, 2)
     vt = jnp.swapaxes(v, 1, 2)
     out = _flash(qt, kt, vt, causal=causal, window=window, blk_q=blk_q,
-                 blk_k=blk_k, interpret=INTERPRET)
+                 blk_k=blk_k, interpret=interpret_default())
     return jnp.swapaxes(out, 1, 2)
 
 
@@ -41,5 +50,5 @@ def ssd_scan(x: jnp.ndarray, a: jnp.ndarray, bmat: jnp.ndarray,
     at = jnp.swapaxes(a, 1, 2)                # (B,H,T)
     bt = jnp.swapaxes(bmat, 1, 2)             # (B,G,T,N)
     ct = jnp.swapaxes(cmat, 1, 2)
-    out = _ssd(xt, at, bt, ct, chunk=chunk, interpret=INTERPRET)
+    out = _ssd(xt, at, bt, ct, chunk=chunk, interpret=interpret_default())
     return jnp.swapaxes(out, 1, 2)

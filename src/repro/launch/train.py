@@ -48,6 +48,9 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=0.0, help="0 -> family LR")
     ap.add_argument("--stages", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fuse-window", type=int, default=8,
+                    help="max iterations fused into one on-device scan "
+                         "window (1 = eager per-step loop; see docs/perf.md)")
     ap.add_argument("--reduced", action="store_true",
                     help="CPU-sized variant of the same family")
     ap.add_argument("--out", default="", help="write History JSON here")
@@ -74,7 +77,7 @@ def main() -> None:
     tcfg = TrainConfig(
         global_batch=args.batch, microbatch=args.batch, seq_len=seq,
         steps=args.steps, eval_every=max(args.steps // 10, 1),
-        seed=args.seed,
+        fuse_window=args.fuse_window, seed=args.seed,
         optimizer=OptimizerConfig(lr=lr, total_steps=args.steps),
         recovery=rcfg)
 

@@ -117,6 +117,20 @@ class Adaptive(RecoveryStrategy):
         if self.high is not self.low:
             self.high.after_step(state, hist)
 
+    def after_step_horizon(self, step: int) -> int:
+        # the sliding failure-rate window appends one sample per wall
+        # iteration (and the children's shadow bookkeeping runs per step):
+        # adaptive always drives the eager loop
+        return 1
+
+    def replay_horizon(self):
+        # either child may be active when a failure lands; the batch cache
+        # must cover the deeper of the two rollbacks (None = unbounded)
+        horizons = [self.low.replay_horizon(), self.high.replay_horizon()]
+        if any(h is None for h in horizons):
+            return None
+        return max(horizons)
+
     def on_run_end(self) -> None:
         # both children may own background resources (statestore children
         # run an async snapshot writer even while shadowing)

@@ -31,6 +31,15 @@ capability flags (drive trainer wiring — the trainer never looks at names)
   ``uses_swap_schedule``   — the train step must run CheckFree+'s swapped
                              stage order on half the batch
 
+fused hot-path contract (the trainer fuses failure-free iteration runs into
+a single on-device ``lax.scan`` window and only drains state at window
+boundaries — see ``docs/perf.md``)
+  ``after_step_horizon(step)`` — how many iterations may be fused before
+                             ``after_step`` must observe host state again
+  ``replay_horizon()``     — how far ``effective_step`` can roll back on a
+                             failure (bounds the trainer's batch replay
+                             cache)
+
 Strategies are selected purely through the registry
 (:func:`repro.recovery.registry.make_strategy`); writing a new policy is a
 subclass + ``@register_strategy("name")`` — no trainer surgery.
@@ -115,6 +124,38 @@ class RecoveryStrategy:
         (failures per wall iteration).  Called by the trainer once per wall
         iteration when the failure schedule exposes ``observed_rate`` (the
         simulator's adapter does); default is to ignore it."""
+
+    # ---- fused hot-path contract -------------------------------------
+    def after_step_horizon(self, step: int) -> Optional[int]:
+        """How many consecutive iterations, starting from effective step
+        ``step``, the trainer may fuse into one on-device window before
+        ``after_step`` must observe host-resident state again.
+
+        ``None`` means unbounded (``after_step`` never needs per-step host
+        state); ``1`` forces the eager per-step loop.  The trainer ends
+        every fused window with one ``after_step`` call on the drained
+        state, so a strategy whose bookkeeping only *acts* at a cadence
+        (checkpoint saves every N steps) returns the distance to its next
+        acting step — the skipped intermediate calls must be no-ops.
+
+        The default inspects whether the subclass overrides
+        :meth:`after_step` at all: strategies that keep the no-op
+        bookkeeping fuse freely, anything that overrides it is
+        conservatively pinned to the eager loop unless it also overrides
+        this method."""
+        if type(self).after_step is RecoveryStrategy.after_step:
+            return None
+        return 1
+
+    def replay_horizon(self) -> Optional[int]:
+        """Maximum number of iterations ``effective_step`` can move
+        *backwards* on a failure — i.e. how much of the deterministic batch
+        stream must stay replayable.  The trainer evicts cached batches
+        older than this horizon; ``None`` keeps every batch (unbounded
+        rollback).  The base policy never rolls back, so the default is 0;
+        strategies that restore older state (checkpoint rollback) must
+        report their deepest possible rollback."""
+        return 0
 
     # ---- wall-clock model --------------------------------------------
     def iteration_cost(self) -> float:

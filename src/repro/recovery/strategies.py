@@ -96,6 +96,21 @@ class Checkpointing(RecoveryStrategy):
         self.checkpointer.maybe_save(state.effective_step,
                                      (state.params, state.opt_state))
 
+    def after_step_horizon(self, step: int) -> int:
+        # saves only fire at multiples of checkpoint_every; every other
+        # after_step is a no-op, so the trainer may fuse up to the next
+        # save boundary (the window then ends exactly on the saving step)
+        every = max(self.rcfg.checkpoint_every, 1)
+        return every - step % every
+
+    def replay_horizon(self) -> int:
+        # deepest rollback: the newest checkpoint plus every corrupted-
+        # fallback candidate the Checkpointer retains (keep=3), plus the
+        # restart-from-step-0 path before the first save (covered because
+        # effective_step is then < checkpoint_every <= horizon)
+        from repro.ckpt.checkpoint import Checkpointer
+        return Checkpointer.DEFAULT_KEEP * max(self.rcfg.checkpoint_every, 1)
+
     def iteration_cost(self) -> float:
         # saves overlap training partially; amortized residual overhead,
         # priced by the remote tier's latency + bandwidth

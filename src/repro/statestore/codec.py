@@ -70,10 +70,21 @@ def host_snapshot(tree: Pytree, *, step: int, shard_id: str) -> Snapshot:
 
     This is the only part of a save that must happen synchronously (the
     buffers may be mutated by the next train step); serialization and tier
-    I/O can run behind it.
+    I/O can run behind it.  All leaves move in a *single*
+    :func:`jax.device_get` — on real devices that batches the D2H
+    transfers instead of issuing one blocking copy per leaf.  Any leaf
+    that comes back as a view of a device buffer is copied into owned host
+    memory: the trainer donates its params/opt-state buffers to the next
+    fused step, so a zero-copy view could be invalidated under the
+    background writer.
     """
     leaves, treedef = jax.tree_util.tree_flatten(tree)
-    host = [np.asarray(x) for x in leaves]
+    host = []
+    for x in jax.device_get(leaves):
+        a = np.asarray(x)
+        if not (a.flags.owndata and a.flags.writeable):
+            a = np.array(a)       # detach from the (donatable) device buffer
+        host.append(a)
     return Snapshot(shard_id=shard_id, step=step, leaves=host,
                     treedef=treedef)
 

@@ -236,6 +236,14 @@ class TieredCheckpoint(StoreBackedStrategy):
             tiers.append("remote")
         self._save_shards(state, tiers)
 
+    def after_step_horizon(self, step: int) -> int:
+        # snapshots only fire when a tier's cadence divides the step; the
+        # trainer may fuse up to the next firing tier (with the default
+        # hot_every=1 this is 1 — per-step hot snapshots pin the window)
+        cadences = (max(self.rcfg.hot_every, 1), self.cold_every,
+                    self.remote_every)
+        return min(c - step % c for c in cadences)
+
     def iteration_cost(self) -> float:
         # the hot snapshot's host copy is on the critical path; disk and
         # remote writes are asynchronous residuals
@@ -267,6 +275,9 @@ class NeighborReplication(StoreBackedStrategy):
                 state.effective_step % self.cold_every == 0:
             tiers.append("disk")
         self._save_shards(state, tiers)
+
+    def after_step_horizon(self, step: int) -> int:
+        return 1    # a fresh replica lands in peer memory every iteration
 
     def iteration_cost(self) -> float:
         specs = self.wall.tier_specs()

@@ -1,0 +1,273 @@
+"""Fused hot-path tests: fused-vs-eager parity, window sizing against the
+strategy contract, the bounded replay cache, and the window prefetcher.
+
+The load-bearing property: for the same seed and failure schedule, the
+trainer must produce an *identical* loss / wall-time / omega / failure /
+recovery-error trace whether the fuse window is 1 (eager) or >1 (fused) —
+the fused path is an execution strategy, not a semantic change.  Window 1
+runs the same scan executable with a length-1 leading axis, so this holds
+bit-exactly on a single backend.
+"""
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import (ModelConfig, OptimizerConfig, RecoveryConfig,
+                          TrainConfig)
+from repro.core.trainer import Trainer, _window_buckets
+from repro.data.pipeline import WindowPrefetcher, make_batches
+from repro.models.model import build_model
+from repro.recovery import make_strategy
+
+CFG = ModelConfig(
+    name="hotpath-llama", arch_type="dense", num_layers=4, d_model=32,
+    num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=128, max_seq_len=32,
+    dtype="float32", param_dtype="float32")
+STAGES = 4
+
+
+class ForcedSchedule:
+    def __init__(self, events):
+        self._events = dict(events)
+
+    def at(self, step):
+        return self._events.get(step, [])
+
+
+def run_once(strategy, *, window, events=None, steps=12, eval_every=100,
+             eval_batches=None, tmpdir="/tmp/repro_hotpath"):
+    rcfg = RecoveryConfig(strategy=strategy, num_stages=STAGES,
+                          checkpoint_every=3,
+                          checkpoint_dir=f"{tmpdir}/{strategy}_{window}",
+                          store_dir=f"{tmpdir}/store_{strategy}_{window}")
+    tcfg = TrainConfig(global_batch=4, microbatch=4, seq_len=32, steps=steps,
+                       eval_every=eval_every, fuse_window=window,
+                       optimizer=OptimizerConfig(lr=1e-3, total_steps=steps,
+                                                 warmup_steps=2),
+                       recovery=rcfg)
+    trainer = Trainer(build_model(CFG), tcfg,
+                      schedule=ForcedSchedule(events) if events else None)
+    state, hist = trainer.run(make_batches(CFG, batch=4, seq=32, seed=0),
+                              eval_batches=eval_batches)
+    return state, hist
+
+
+def assert_trace_identical(r1, r2):
+    s1, h1 = r1
+    s2, h2 = r2
+    assert h1.loss == h2.loss
+    assert h1.steps == h2.steps
+    assert h1.wall_time == h2.wall_time
+    assert h1.failures == h2.failures
+    assert h1.wall_iters == h2.wall_iters
+    assert len(h1.recovery_errors) == len(h2.recovery_errors)
+    for (w1, e1), (w2, e2) in zip(h1.recovery_errors, h2.recovery_errors):
+        assert w1 == w2
+        assert e1 == e2 or (np.isnan(e1) and np.isnan(e2))
+    assert s1.effective_step == s2.effective_step
+    assert float(s1.lr_scale) == float(s2.lr_scale)
+    np.testing.assert_array_equal(np.asarray(s1.omegas),
+                                  np.asarray(s2.omegas))
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# fused-vs-eager parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["none", "checkfree", "checkfree_plus",
+                                      "checkpoint"])
+def test_fused_matches_eager_under_failures(strategy, tmp_path):
+    """Same seed/schedule -> identical trace for window 1 vs 8, including
+    windows truncated by mid-run failures."""
+    events = {2: [1], 5: [2], 6: [1]}
+    r1 = run_once(strategy, window=1, events=events, tmpdir=str(tmp_path))
+    r8 = run_once(strategy, window=8, events=events, tmpdir=str(tmp_path))
+    assert_trace_identical(r1, r8)
+    # the fused run actually fused: fewer dispatches than wall iterations
+    assert r8[1].dispatches < r8[1].wall_iters
+    assert r1[1].dispatches == r1[1].wall_iters
+
+
+def test_fused_matches_eager_failure_free(tmp_path):
+    r1 = run_once("none", window=1, steps=16, tmpdir=str(tmp_path))
+    r8 = run_once("none", window=8, steps=16, tmpdir=str(tmp_path))
+    assert_trace_identical(r1, r8)
+    assert r8[1].dispatches == 2      # two full windows of 8
+
+
+def test_fused_matches_eager_with_eval_points(tmp_path):
+    """Windows must break at eval boundaries so eval sees drained params."""
+    from repro.data.pipeline import SyntheticLM, batch_for
+    src = SyntheticLM(CFG.vocab_size, seed=1234)
+    rng = np.random.default_rng(7)
+    evals = [batch_for(CFG, src.sample(rng, 4, 32))]
+    r1 = run_once("none", window=1, steps=12, eval_every=3,
+                  eval_batches=evals, tmpdir=str(tmp_path))
+    r8 = run_once("none", window=8, steps=12, eval_every=3,
+                  eval_batches=evals, tmpdir=str(tmp_path))
+    assert_trace_identical(r1, r8)
+    assert r1[1].eval_loss == r8[1].eval_loss
+    assert len(r8[1].eval_loss) == 4
+
+
+def test_fused_window_truncated_by_scheduled_failure(tmp_path):
+    """A failure in what would be the middle of a full window forces a
+    short window; the trace still matches eager exactly."""
+    events = {3: [1]}                 # window [0..8) must break at 3
+    r1 = run_once("checkfree", window=8, events=events, steps=10,
+                  tmpdir=str(tmp_path))
+    r2 = run_once("checkfree", window=1, events=events, steps=10,
+                  tmpdir=str(tmp_path))
+    assert_trace_identical(r2, r1)
+    # dispatch pattern: [0,2) then [2,3) bucketed... at minimum the first
+    # dispatch cannot cross wall step 3
+    assert r1[1].failures == [(3, 1)]
+
+
+def test_store_backed_strategy_pins_window(tmp_path):
+    """tiered_ckpt keeps per-step hot snapshots (hot_every=1): its horizon
+    caps every window at 1, so fused == eager by construction and hot
+    restores stay bit-identical."""
+    events = {4: [1]}
+    r1 = run_once("tiered_ckpt", window=1, events=events,
+                  tmpdir=str(tmp_path))
+    r8 = run_once("tiered_ckpt", window=8, events=events,
+                  tmpdir=str(tmp_path))
+    assert_trace_identical(r1, r8)
+    assert r8[1].dispatches == r8[1].wall_iters   # window pinned to 1
+
+
+# ---------------------------------------------------------------------------
+# strategy horizon contract
+# ---------------------------------------------------------------------------
+
+def _strategy(name, **kw):
+    rcfg = RecoveryConfig(strategy=name, num_stages=STAGES, **kw)
+    return make_strategy(rcfg)
+
+
+def test_after_step_horizon_defaults():
+    assert _strategy("none").after_step_horizon(0) is None
+    assert _strategy("checkfree").after_step_horizon(5) is None
+    assert _strategy("redundant").after_step_horizon(3) is None
+
+
+def test_after_step_horizon_checkpoint_cadence():
+    s = _strategy("checkpoint", checkpoint_every=10)
+    assert s.after_step_horizon(0) == 10
+    assert s.after_step_horizon(7) == 3
+    assert s.after_step_horizon(10) == 10
+
+
+def test_after_step_horizon_statestore():
+    hot = _strategy("tiered_ckpt", hot_every=1)
+    assert hot.after_step_horizon(0) == 1
+    warm = _strategy("tiered_ckpt", hot_every=4, cold_every=8,
+                     remote_every=16)
+    assert warm.after_step_horizon(0) == 4
+    assert warm.after_step_horizon(6) == 2
+    assert _strategy("neighbor").after_step_horizon(0) == 1
+
+
+def test_after_step_horizon_adaptive_is_eager():
+    assert _strategy("adaptive").after_step_horizon(0) == 1
+
+
+def test_replay_horizons():
+    assert _strategy("none").replay_horizon() == 0
+    assert _strategy("checkfree").replay_horizon() == 0
+    assert _strategy("tiered_ckpt").replay_horizon() == 0
+    ck = _strategy("checkpoint", checkpoint_every=7)
+    assert ck.replay_horizon() == 3 * 7   # Checkpointer.DEFAULT_KEEP
+    ad = _strategy("adaptive", checkpoint_every=7)
+    assert ad.replay_horizon() == 3 * 7   # covers the checkpoint child
+
+
+def test_window_buckets():
+    assert _window_buckets(1) == [1]
+    assert _window_buckets(8) == [8, 4, 2, 1]
+    assert _window_buckets(12) == [8, 4, 2, 1]
+
+
+# ---------------------------------------------------------------------------
+# bounded replay cache + prefetcher
+# ---------------------------------------------------------------------------
+
+def _counting_stream():
+    for i in itertools.count():
+        yield {"tokens": np.full((2, 4), i, np.int32),
+               "labels": np.full((2, 4), i, np.int32)}
+
+
+def test_prefetcher_deterministic_and_replayable():
+    pf = WindowPrefetcher(_counting_stream())
+    try:
+        assert pf.get(3)["tokens"][0, 0] == 3
+        assert pf.get(0)["tokens"][0, 0] == 0     # replay
+        w = pf.stack(1, 3)
+        assert w["tokens"].shape == (3, 2, 4)
+        np.testing.assert_array_equal(w["tokens"][:, 0, 0], [1, 2, 3])
+    finally:
+        pf.close()
+
+
+def test_prefetcher_primed_window_matches_sync():
+    pf = WindowPrefetcher(_counting_stream())
+    try:
+        direct = pf.stack(4, 4)
+        pf.prime(8, 2)
+        primed = pf.take(8, 2)
+        np.testing.assert_array_equal(primed["tokens"][:, 0, 0], [8, 9])
+        np.testing.assert_array_equal(direct["tokens"][:, 0, 0],
+                                      [4, 5, 6, 7])
+        # a take for an unprimed window builds synchronously
+        miss = pf.take(2, 2)
+        np.testing.assert_array_equal(miss["tokens"][:, 0, 0], [2, 3])
+    finally:
+        pf.close()
+
+
+def test_prefetcher_eviction_bounds_cache_and_rejects_deep_replay():
+    pf = WindowPrefetcher(_counting_stream())
+    try:
+        pf.stack(0, 10)
+        assert pf.cached == 10
+        pf.evict_below(6)
+        assert pf.cached == 4
+        assert pf.get(7)["tokens"][0, 0] == 7     # inside horizon
+        with pytest.raises(KeyError, match="replay_horizon"):
+            pf.get(2)                             # evicted
+    finally:
+        pf.close()
+
+
+def test_trainer_evicts_replay_cache(tmp_path):
+    """A merge strategy never rolls back (horizon 0): the trainer's cache
+    must not retain every batch ever drawn."""
+    rcfg = RecoveryConfig(strategy="checkfree", num_stages=STAGES)
+    tcfg = TrainConfig(global_batch=4, microbatch=4, seq_len=32, steps=24,
+                       eval_every=100, fuse_window=4,
+                       optimizer=OptimizerConfig(lr=1e-3, total_steps=24,
+                                                 warmup_steps=2),
+                       recovery=rcfg)
+    trainer = Trainer(build_model(CFG), tcfg, schedule=None)
+    trainer.run(make_batches(CFG, batch=4, seq=32, seed=0))
+    # everything at or below the last drained step is evicted; only the
+    # final window's prefetch lookahead may remain
+    assert trainer._prefetch.cached <= tcfg.fuse_window
+
+
+def test_trainer_checkpoint_rollback_replays_from_bounded_cache(tmp_path):
+    """Checkpoint rollback re-reads old batches: the bounded cache must
+    still serve them (horizon covers the deepest rollback)."""
+    events = {7: [1]}   # rollback from effective 7 to checkpoint at 6
+    r1 = run_once("checkpoint", window=1, events=events, steps=10,
+                  tmpdir=str(tmp_path))
+    r8 = run_once("checkpoint", window=8, events=events, steps=10,
+                  tmpdir=str(tmp_path))
+    assert_trace_identical(r1, r8)
+    assert r1[0].effective_step == 10

@@ -93,6 +93,30 @@ def test_codec_roundtrip_preserves_dtype(dtype_name):
         assert got.tobytes() == np.asarray(arr).tobytes(), (dtype_name, shape)
 
 
+def test_host_snapshot_batched_device_get_bit_identical():
+    """The whole-pytree ``jax.device_get`` fast path must produce snapshots
+    bit-identical to per-leaf copies, with owned (donation-safe) host
+    buffers, across mixed dtypes/shapes."""
+    key = jax.random.PRNGKey(0)
+    tree = {
+        "w": jax.random.normal(key, (7, 33), jnp.float32),
+        "b16": jax.random.normal(key, (4, 130)).astype(jnp.bfloat16),
+        "idx": jnp.arange(11, dtype=jnp.int32),
+        "nested": {"scalar": jnp.float32(3.25),
+                   "host": np.linspace(0, 1, 9, dtype=np.float64)},
+    }
+    snap = host_snapshot(tree, step=5, shard_id="full")
+    leaves, _ = jax.tree_util.tree_flatten(tree)
+    assert len(snap.leaves) == len(leaves)
+    for got, ref in zip(snap.leaves, leaves):
+        want = np.asarray(ref)
+        assert got.dtype == want.dtype
+        assert got.shape == want.shape
+        assert got.tobytes() == want.tobytes()
+        # the snapshot must not alias a device buffer the trainer may donate
+        assert got.flags.owndata and got.flags.writeable
+
+
 def test_codec_template_mismatch_raises():
     tree = {"a": jnp.ones((2, 3), jnp.float32)}
     snap = decode(encode(host_snapshot(tree, step=0, shard_id="full")))
