@@ -67,7 +67,7 @@ def _family(name: str) -> Dict[str, Any]:
 
 def time_run(cfg: ModelConfig, *, window: int, steps: int, seq: int,
              batch: int, stages: int, seed: int = 0, repeats: int = 3,
-             ) -> Dict[str, Any]:
+             backend: str = "host") -> Dict[str, Any]:
     """Real wall-clock of a failure-free Trainer.run at ``fuse_window``.
 
     The first run warms the jit caches (every window bucket compiles); the
@@ -81,7 +81,8 @@ def time_run(cfg: ModelConfig, *, window: int, steps: int, seq: int,
                        optimizer=OptimizerConfig(lr=1e-3, total_steps=steps,
                                                  warmup_steps=5),
                        recovery=rcfg)
-    trainer = Trainer(build_model(cfg), tcfg, schedule=None)
+    trainer = Trainer(build_model(cfg), tcfg, schedule=None,
+                      backend=backend)
 
     def one_run():
         batches = make_batches(cfg, batch=batch, seq=seq, seed=seed)
@@ -101,15 +102,17 @@ def time_run(cfg: ModelConfig, *, window: int, steps: int, seq: int,
 
 
 def run(families: List[str], windows: List[int], steps: int,
-        smoke: bool = False) -> Dict[str, Any]:
-    out: Dict[str, Any] = {"steps": steps, "smoke": smoke, "families": {}}
+        smoke: bool = False, backend: str = "host") -> Dict[str, Any]:
+    out: Dict[str, Any] = {"steps": steps, "smoke": smoke,
+                           "backend": backend, "families": {}}
     rows = []
     ok = True
     for fam in families:
         spec = _family(fam)
         recs = {w: time_run(spec["cfg"], window=w, steps=steps,
                             seq=spec["seq"], batch=spec["batch"],
-                            stages=spec["stages"]) for w in windows}
+                            stages=spec["stages"], backend=backend)
+                for w in windows}
         eager = recs[1]
         fam_out: Dict[str, Any] = {"model": spec["cfg"].name,
                                    "seq": spec["seq"],
@@ -133,7 +136,8 @@ def run(families: List[str], windows: List[int], steps: int,
     print(fmt_table(["family", "window", "steps/s", "dispatches",
                      "speedup", "loss trace"], rows))
     out["trace_parity"] = ok
-    path = save_json("BENCH_hotpath.json", out)
+    suffix = "" if backend == "host" else f"_{backend}"
+    path = save_json(f"BENCH_hotpath{suffix}.json", out)
     print(f"wrote {path}")
     return out
 
@@ -144,27 +148,52 @@ def main() -> None:
                     help="paper_llama smoke config only; fail unless the "
                          "fused window reaches >= 2x eager with an exact "
                          "loss-trace match (CI gate)")
+    ap.add_argument("--backend", default="host", choices=["host", "spmd"],
+                    help="'spmd' times the pipeline-parallel shard_map "
+                         "backend (needs one host device per stage: launch "
+                         "with XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=2 or let this script force it); results "
+                         "land in BENCH_hotpath_spmd.json")
     ap.add_argument("--steps", type=int, default=0)
     args = ap.parse_args()
 
+    if args.backend == "spmd":
+        # one device per stage (the bench families use 2); must happen
+        # before jax's first backend query
+        from repro.launch.mesh import force_host_devices
+        force_host_devices(2)
+        import jax
+        if len(jax.devices()) < 2:
+            raise SystemExit(
+                "spmd bench needs >= 2 host devices; relaunch with "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=2")
+
     if args.smoke:
         steps = args.steps or 128
-        out = run(["paper_llama"], [1, 8, 16, 32], steps, smoke=True)
+        out = run(["paper_llama"], [1, 8, 16, 32], steps, smoke=True,
+                  backend=args.backend)
         fam = out["families"]["paper_llama"]["windows"]
         best_w, best = max(((w, rec["speedup_vs_eager"])
                             for w, rec in fam.items() if w != "1"),
                            key=lambda kv: kv[1])
         if not out["trace_parity"]:
             raise SystemExit("FAIL: fused loss trace diverged from eager")
-        if best < 2.0:
+        # the 2x bar is calibrated for the host backend's overhead-
+        # dominated smoke regime; the spmd per-step includes real
+        # cross-device collectives, so fusion buys less there — the gate
+        # still catches "fusion stopped helping" regressions
+        bar = 2.0 if args.backend == "host" else 1.2
+        if best < bar:
             raise SystemExit(
                 f"FAIL: best fused window ({best_w}) reached only "
-                f"{best:.2f}x eager (>= 2x required)")
+                f"{best:.2f}x eager (>= {bar}x required)")
         print(f"smoke OK: fused window {best_w} = {best:.2f}x eager "
-              "(>= 2x), traces exact")
+              f"(>= {bar}x), traces exact")
     else:
         steps = args.steps or 96
-        run(["paper_llama", "moe", "ssm"], [1, 2, 4, 8, 16], steps)
+        fams = (["paper_llama", "moe"] if args.backend == "spmd"
+                else ["paper_llama", "moe", "ssm"])  # spmd: dense/moe towers
+        run(fams, [1, 2, 4, 8, 16], steps, backend=args.backend)
 
 
 if __name__ == "__main__":

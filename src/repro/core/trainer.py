@@ -84,8 +84,11 @@ def _make_loss_fn(model: Model, part: StagePartition, use_swap: bool,
         first = {k: v[:half] for k, v in batch.items()}
         second = {k: v[half:] for k, v in batch.items()}
         l1, m1 = model.loss(params, first)
-        l2, _ = model.loss(_permute_tower(params, tower_key, perm), second)
-        return 0.5 * (l1 + l2), m1
+        l2, m2 = model.loss(_permute_tower(params, tower_key, perm), second)
+        # telemetry covers the WHOLE batch: average both halves' metrics
+        # (the in-order half alone would silently drop half the ce/aux)
+        metrics = {k: 0.5 * (m1[k] + m2[k]) for k in m1}
+        return 0.5 * (l1 + l2), metrics
 
     return loss_fn
 
@@ -203,14 +206,31 @@ def _window_buckets(cap: int) -> List[int]:
 
 
 class Trainer:
-    """Drives (model x recovery strategy x failure schedule)."""
+    """Drives (model x recovery strategy x failure schedule).
+
+    ``backend`` selects where the fused step executes:
+
+    * ``"host"`` (default) — the single-program loop; stages are slices of
+      one resident parameter tree.
+    * ``"spmd"`` — the real pipeline-parallel backend
+      (:mod:`repro.pipeline.spmd`): the tower and Adam moments are sharded
+      over a 1-D ``("stage",)`` mesh (one device per stage — built by
+      ``launch.mesh.make_host_pipeline_mesh`` unless ``mesh`` is given),
+      activations hop stages via ``ppermute`` in a GPipe schedule, and
+      recovery strategies exposing the ``recover_in_mesh`` capability
+      repair failed stages with neighbour-hop collectives instead of
+      host-side gathers.  Everything downstream of ``fused_step`` —
+      window sizing, failure handling, metrics drain — is backend-agnostic.
+    """
 
     def __init__(self, model: Model, tcfg: TrainConfig,
                  wall: Optional[WallClockModel] = None,
-                 schedule: Optional[FailureSchedule] = None):
+                 schedule: Optional[FailureSchedule] = None, *,
+                 backend: str = "host", mesh=None):
         self.model = model
         self.tcfg = tcfg
         self.rcfg = tcfg.recovery
+        self.backend = backend
         self.part = StagePartition(model.cfg, self.rcfg.num_stages)
         self.strategy: RecoveryStrategy = make_strategy(self.rcfg, wall=wall)
         self.wall = self.strategy.wall
@@ -227,10 +247,29 @@ class Trainer:
             return params, init_adam(params)
 
         self.strategy.bind(self.part, init_fn=fresh_init)
-        self.fused_step = make_fused_train_step(
-            model, tcfg.optimizer, self.part,
-            use_swap=self.strategy.uses_swap_schedule,
-            lr_decay=self.rcfg.lr_boost_decay)
+        if backend == "spmd":
+            from repro.launch.mesh import make_host_pipeline_mesh
+            from repro.pipeline.spmd import (make_in_mesh_recover,
+                                             make_spmd_fused_train_step)
+            self.mesh = (mesh if mesh is not None
+                         else make_host_pipeline_mesh(self.rcfg.num_stages))
+            self.fused_step = make_spmd_fused_train_step(
+                model, tcfg.optimizer, self.part, self.mesh,
+                tcfg.num_microbatches,
+                use_swap=self.strategy.uses_swap_schedule,
+                lr_decay=self.rcfg.lr_boost_decay)
+            if self.strategy.recover_in_mesh:
+                self.strategy.bind_in_mesh(
+                    make_in_mesh_recover(self.mesh, self.part))
+        elif backend == "host":
+            self.mesh = None
+            self.fused_step = make_fused_train_step(
+                model, tcfg.optimizer, self.part,
+                use_swap=self.strategy.uses_swap_schedule,
+                lr_decay=self.rcfg.lr_boost_decay)
+        else:
+            raise ValueError(
+                f"unknown backend {backend!r}; expected 'host' or 'spmd'")
         self.eval_step = make_eval_step(model)
         self._buckets = _window_buckets(max(int(tcfg.fuse_window), 1))
         self._eval_batches: Optional[List] = None

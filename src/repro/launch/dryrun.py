@@ -278,7 +278,8 @@ def cost_terms(arch: str, shape_name: str, mesh, cfg) -> Tuple[
 # ---------------------------------------------------------------------------
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
-            with_cost: bool = True, verbose: bool = True) -> Dict[str, Any]:
+            with_cost: bool = True, verbose: bool = True,
+            lower_only: bool = False) -> Dict[str, Any]:
     rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
                            "mesh": "2x16x16" if multi_pod else "16x16"}
     if (arch, shape_name) in SKIPS:
@@ -298,6 +299,16 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             # jax caches jaxprs by function identity
             lowered = jax.jit(lambda *a: step_fn(*a)).lower(*args)
             t1 = time.time()
+            if lower_only:
+                # --smoke: mesh construction + lowering proof only (the CI
+                # guard against mesh API regressions; no compile / cost)
+                rec.update({"status": "lowered",
+                            "lower_s": round(t1 - t0, 1)})
+                if verbose:
+                    print(f"[ok] {arch:22s} {shape_name:12s} "
+                          f"{rec['mesh']:8s} lowered in "
+                          f"{rec['lower_s']:6.1f}s (smoke)")
+                return rec
             compiled = lowered.compile()
             t2 = time.time()
         ma = compiled.memory_analysis()
@@ -378,8 +389,28 @@ def main() -> None:
     ap.add_argument("--no-cost", action="store_true",
                     help="skip the unrolled cost pass (lower+compile proof "
                          "only — the default for the multi-pod sweep)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mesh-regression guard: construct every "
+                         "production/pipeline mesh variant and lower one "
+                         "small training pair (no compile, no cost pass) — "
+                         "fails fast on mesh API breakage like the "
+                         "jax.sharding.AxisType pin mismatch")
     ap.add_argument("--out", default="")
     args = ap.parse_args()
+
+    if args.smoke:
+        from repro.launch.mesh import make_pipeline_mesh
+        for mp in (False, True):
+            prod = make_production_mesh(multi_pod=mp)
+            pipe = make_pipeline_mesh(num_stages=8, multi_pod=mp)
+            print(f"[mesh ok] multi_pod={mp} production={dict(prod.shape)} "
+                  f"pipeline={dict(pipe.shape)}")
+        rec = run_one("paper-llama-124m", "train_4k", lower_only=True)
+        if rec["status"] != "lowered":
+            print(rec.get("error", rec))
+            raise SystemExit(1)
+        print("=== mesh smoke OK ===")
+        return
 
     archs = arch_ids() if args.arch == "all" else args.arch.split(",")
     shapes = (list(INPUT_SHAPES) if args.shape == "all"

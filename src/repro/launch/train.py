@@ -51,6 +51,11 @@ def main() -> None:
     ap.add_argument("--fuse-window", type=int, default=8,
                     help="max iterations fused into one on-device scan "
                          "window (1 = eager per-step loop; see docs/perf.md)")
+    ap.add_argument("--backend", default="host", choices=["host", "spmd"],
+                    help="'spmd' runs the pipeline-parallel shard_map "
+                         "backend (one device per stage; forces host "
+                         "devices when none are configured — see "
+                         "docs/pipeline.md)")
     ap.add_argument("--reduced", action="store_true",
                     help="CPU-sized variant of the same family")
     ap.add_argument("--out", default="", help="write History JSON here")
@@ -65,6 +70,11 @@ def main() -> None:
     if cfg.num_layers % max(stages, 1) != 0:
         stages = max(d for d in range(1, cfg.num_layers + 1)
                      if cfg.num_layers % d == 0 and d <= stages)
+    if args.backend == "spmd":
+        # one device per stage; best-effort — only works before jax's first
+        # backend query, otherwise launch with XLA_FLAGS set in the shell
+        from repro.launch.mesh import force_host_devices
+        force_host_devices(stages)
     seq = args.seq or min(cfg.max_seq_len, 512)
     lr = args.lr or 3e-4
 
@@ -84,8 +94,8 @@ def main() -> None:
     model = build_model(cfg)
     n = cfg.param_count()
     print(f"arch={cfg.name} ({n / 1e6:.0f}M params) strategy={args.strategy} "
-          f"stages={stages} steps={args.steps} rate={args.rate:.0%}/h "
-          f"seq={seq} batch={args.batch}")
+          f"backend={args.backend} stages={stages} steps={args.steps} "
+          f"rate={args.rate:.0%}/h seq={seq} batch={args.batch}")
 
     schedule = None
     if args.scenario:
@@ -105,7 +115,7 @@ def main() -> None:
              for _ in range(2)]
 
     trainer = Trainer(model, tcfg, wall=WallClockModel(
-        model_bytes=4 * n * 2), schedule=schedule)
+        model_bytes=4 * n * 2), schedule=schedule, backend=args.backend)
     if args.scenario and trainer.schedule is not None:
         print(trainer.schedule.summary())
     state, hist = trainer.run(batches, evals, verbose=not args.quiet)

@@ -8,7 +8,7 @@ to zero — exposed via :func:`reset_state_subtree`.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -63,12 +63,23 @@ def lr_schedule(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
 
 def adam_update(cfg: OptimizerConfig, params: Params, grads: Params,
                 state: OptState, lr_scale: jnp.ndarray | float = 1.0,
+                *, grad_norm: Optional[jnp.ndarray] = None,
                 ) -> Tuple[Params, OptState, Dict[str, jnp.ndarray]]:
-    """One Adam step.  ``lr_scale`` carries CheckFree's 1.1x recovery boost."""
-    if cfg.grad_clip > 0:
-        grads, gn = clip_by_global_norm(grads, cfg.grad_clip)
-    else:
+    """One Adam step.  ``lr_scale`` carries CheckFree's 1.1x recovery boost.
+
+    ``grad_norm`` overrides the locally computed global grad norm — the
+    SPMD pipeline backend passes the psum-assembled *mesh-global* norm so
+    each device clips its shard by the same factor the host backend would
+    use on the gathered tree.
+    """
+    if grad_norm is None:
         gn = global_norm(grads)
+    else:
+        gn = grad_norm
+    if cfg.grad_clip > 0:
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
+        grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                        ).astype(g.dtype), grads)
     step = state.step + 1
     b1, b2 = cfg.betas
     lr = lr_schedule(cfg, step) * lr_scale

@@ -1,4 +1,7 @@
-from repro.pipeline.spmd import (checkfree_recover_spmd, pipeline_loss,
+from repro.pipeline.spmd import (checkfree_recover_spmd,
+                                 make_in_mesh_recover,
+                                 make_spmd_fused_train_step, pipeline_loss,
                                  stage_index)
 
-__all__ = ["pipeline_loss", "checkfree_recover_spmd", "stage_index"]
+__all__ = ["pipeline_loss", "make_spmd_fused_train_step",
+           "checkfree_recover_spmd", "make_in_mesh_recover", "stage_index"]

@@ -82,12 +82,16 @@ class RecoveryStrategy:
     handles_edge_stages: ClassVar[bool] = True
     handles_consecutive: ClassVar[bool] = False
     uses_swap_schedule: ClassVar[bool] = False
+    recover_in_mesh: ClassVar[bool] = False   # repairs stages with in-mesh
+                                              # collectives when a backend
+                                              # offers them (SPMD pipeline)
 
     def __init__(self, rcfg: "RecoveryConfig", wall: "WallClockModel"):
         self.rcfg = rcfg
         self.wall = wall
         self.part: Optional["StagePartition"] = None
         self.init_fn: Optional[InitFn] = None
+        self._in_mesh_recover: Optional[Callable] = None
 
     # ---- trainer wiring ----------------------------------------------
     def bind(self, part: "StagePartition",
@@ -96,6 +100,17 @@ class RecoveryStrategy:
         that may have to restart).  Called once by the trainer."""
         self.part = part
         self.init_fn = init_fn
+        return self
+
+    def bind_in_mesh(self, recover_fn: Callable) -> "RecoveryStrategy":
+        """Attach a backend-provided in-mesh recovery collective
+        ``recover(params, omegas, failed, reinit) -> params`` (see
+        :func:`repro.pipeline.spmd.make_in_mesh_recover`).  Called by the
+        trainer only when both the backend offers one and the strategy
+        advertises ``recover_in_mesh``; strategies that never bind keep
+        using the host-side pytree math unchanged — that is what makes
+        every policy run unmodified on either backend."""
+        self._in_mesh_recover = recover_fn
         return self
 
     # ---- lifecycle ---------------------------------------------------

@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.core.recovery import (recover_consecutive, recover_stage,
                                  recovery_error)
+from repro.pipeline.spmd import IN_MESH_REINITS
 from repro.core.state import History, TrainState
 from repro.optim.adam import OptState
 from repro.recovery.base import FailureContext, RecoveryStrategy
@@ -127,8 +128,16 @@ class Checkpointing(RecoveryStrategy):
 
 class MergeRecovery(RecoveryStrategy):
     """Shared CheckFree-family machinery: neighbour-merge reinit of the failed
-    stage, zeroed optimizer moments for that stage, Alg. 1's LR boost."""
+    stage, zeroed optimizer moments for that stage, Alg. 1's LR boost.
 
+    On the SPMD backend the trainer binds an in-mesh collective
+    (``bind_in_mesh``); deterministic reinits then run as neighbour-hop
+    ppermutes + a local merge on the stage-sharded tower instead of
+    host-side slice gathers.  Stochastic reinits (``random``) and
+    consecutive-run recovery keep the host path — they are rare events and
+    bit-match either way."""
+
+    recover_in_mesh = True
     reinit: ClassVar[str] = "grad_norm"
 
     def _omegas(self, state: TrainState) -> jnp.ndarray:
@@ -160,9 +169,13 @@ class MergeRecovery(RecoveryStrategy):
             # protects them; if an event still arrives, degrade to copy.
             reinit = "copy_prev"
         before = state.params
-        params = recover_stage(before, self.part, event.stage,
-                               self._omegas(state), strategy=reinit,
-                               key=event.key)
+        if self._in_mesh_recover is not None and reinit in IN_MESH_REINITS:
+            params = self._in_mesh_recover(before, self._omegas(state),
+                                           event.stage, reinit)
+        else:
+            params = recover_stage(before, self.part, event.stage,
+                                   self._omegas(state), strategy=reinit,
+                                   key=event.key)
         err = float(recovery_error(before, params, self.part, event.stage))
         event.hist.recovery_errors.append((event.wall_step, err))
         opt_state = self._zero_stage_moments(state.opt_state, [event.stage])
