@@ -29,20 +29,28 @@ for arch in ARCHS:
              batch_for(cfg, src.sample(rng, BATCH, PROMPT), rng).items()}
     cap = PROMPT + NEW + (cfg.num_patches if cfg.arch_type == "vlm" else 0)
 
-    prefill = jax.jit(lambda p, b: model.prefill(p, b, cap))
-    decode = jax.jit(lambda p, c, t: model.decode_step(p, c, t))
+    # argmax inside the jitted steps: one dispatch per token, and the
+    # generated tokens are drained once at the end
+    def _prefill(p, b, model=model, cap=cap):
+        logits, cache = model.prefill(p, b, cap)
+        return cache, jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
 
-    logits, cache = prefill(params, batch)
-    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    def _decode(p, c, t, model=model):
+        logits, cache = model.decode_step(p, c, t)
+        return cache, jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+    prefill = jax.jit(_prefill)
+    decode = jax.jit(_decode)
+
+    cache, tok = prefill(params, batch)
     toks = [tok]
     t0 = time.time()
     for _ in range(NEW - 1):
-        logits, cache = decode(params, cache, tok)
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        cache, tok = decode(params, cache, tok)
         toks.append(tok)
     jax.block_until_ready(tok)
     dt = time.time() - t0
-    gen = np.stack([np.asarray(t) for t in toks], 1)
+    gen = np.stack(jax.device_get(toks), 1)
     assert np.isfinite(gen).all() and gen.shape == (BATCH, NEW)
     print(f"{arch:22s} [{cfg.arch_type:6s}] decode "
           f"{BATCH * (NEW - 1) / dt:6.1f} tok/s (batch {BATCH})  "

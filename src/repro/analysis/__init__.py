@@ -1,0 +1,28 @@
+"""``repro.analysis`` — JAX/Pallas-aware static analysis for this repo.
+
+Static side (pure stdlib, no jax import):
+
+* :mod:`repro.analysis.engine` — visitor framework, rule registry, inline
+  ``# repro: allow[rule-id]`` suppressions, finding fingerprints;
+* :mod:`repro.analysis.rules` — the six codebase-specific rules guarding
+  the fused-pipeline invariants (see ``docs/static_analysis.md``);
+* :mod:`repro.analysis.baseline` — grandfather file, fail-on-new workflow;
+* ``python -m repro.analysis`` — the CLI (text/JSON output, ``--strict``).
+
+Runtime side (imports jax, lazily):
+
+* :mod:`repro.analysis.runtime` — transfer-guard / leak-check context
+  managers, the retrace sentinel, and the pytest fixtures that wrap tests
+  in them.
+"""
+from repro.analysis.engine import (Finding, ModuleIndex, ProjectContext,  # noqa: F401
+                                   Rule, all_rules, register_rule,
+                                   run_paths)
+from repro.analysis.baseline import (DEFAULT_BASELINE, load_baseline,  # noqa: F401
+                                     split_by_baseline, write_baseline)
+
+__all__ = [
+    "Finding", "ModuleIndex", "ProjectContext", "Rule", "all_rules",
+    "register_rule", "run_paths", "DEFAULT_BASELINE", "load_baseline",
+    "split_by_baseline", "write_baseline",
+]

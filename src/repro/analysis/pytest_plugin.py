@@ -1,0 +1,64 @@
+"""Pytest integration for the runtime enforcement layer.
+
+Activate from a ``conftest.py`` with::
+
+    from repro.analysis.pytest_plugin import *  # noqa: F401,F403
+
+Tests then opt in per-item:
+
+* ``@pytest.mark.runtime_guard`` — run the test under
+  :func:`repro.analysis.runtime.guarded`: any *implicit* device->host
+  transfer or tracer leak fails the test.  Explicit ``jax.device_get``
+  stays legal.
+* ``@pytest.mark.sync_free`` — transfer guard only (no leak checking;
+  leak checking disables the C++ jit fast path, so use the narrower
+  marker for perf-sensitive tests).
+* fixture ``runtime_guard`` — the :mod:`repro.analysis.runtime` module,
+  for tests that want to guard a *region* rather than the whole test::
+
+      def test_hot_path(runtime_guard):
+          with runtime_guard.sync_free():
+              trainer.run(...)
+
+Opt-in rather than blanket: plenty of tier-1 tests legitimately pull
+scalars off device (``float(loss)`` in asserts); wrapping everything
+would outlaw ordinary test ergonomics instead of the hot path.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.analysis import runtime as _runtime
+
+_MARKER_DOCS = {
+    "runtime_guard": (
+        "runtime_guard: run under repro.analysis.runtime.guarded() — "
+        "implicit device->host transfers and tracer leaks fail the test"
+    ),
+    "sync_free": (
+        "sync_free: run under repro.analysis.runtime.sync_free() — "
+        "implicit device->host transfers fail the test"
+    ),
+}
+
+
+def pytest_configure(config):
+    for line in _MARKER_DOCS.values():
+        config.addinivalue_line("markers", line)
+
+
+@pytest.hookimpl(wrapper=True)
+def pytest_runtest_call(item):
+    if item.get_closest_marker("runtime_guard") is not None:
+        with _runtime.guarded():
+            return (yield)
+    if item.get_closest_marker("sync_free") is not None:
+        with _runtime.sync_free():
+            return (yield)
+    return (yield)
+
+
+@pytest.fixture
+def runtime_guard():
+    """The repro.analysis.runtime module, for region-scoped guarding."""
+    return _runtime

@@ -1,0 +1,184 @@
+"""Runtime enforcement of the invariants the static rules guard.
+
+The static pass (``repro.analysis.rules``) proves the *code shape*; this
+module enforces the *execution*:
+
+* :func:`sync_free` — fails the enclosed block on any **implicit**
+  device-to-host transfer (``float(tracer)``, ``np.asarray(device_array)``,
+  ``.item()``).  Explicit ``jax.device_get`` — the window-boundary drain —
+  stays legal, which is exactly the fused hot path's contract: one explicit
+  drain per window, zero hidden syncs.
+* :func:`no_tracer_leaks` — ``jax.checking_leaks()``: a traced value
+  escaping its trace (e.g. stashed on ``self`` inside a jitted function)
+  raises instead of silently holding the tracer alive.
+* :func:`guarded` — both of the above, the context the pytest plugin wraps
+  marked tests in.
+* :func:`compiled_variant_count` / :func:`assert_retrace_bound` — the
+  retrace sentinel: the fused train step must compile exactly once per
+  window bucket (every extra variant is a silent recompile eating the
+  fusion win).
+
+``sync_free`` is two layers deep because JAX's transfer guard only fires
+when an actual cross-device copy happens: on the CPU backend every
+device->host "transfer" is zero-copy, so ``jax.transfer_guard_device_to_
+host("disallow")`` alone never trips in CPU CI.  The second layer patches
+the host-conversion dunders (``__float__``/``__int__``/``__bool__``/
+``item``/``tolist``/...) on ``ArrayImpl`` for the duration of the block
+and re-routes ``jax.device_get`` through an explicit-section marker.
+Known CPU gap: ``np.asarray(device_array)`` reads through the C-level
+buffer protocol, which Python cannot intercept — on accelerator backends
+the transfer-guard layer catches it.  The patch is process-global while
+active — use it around a specific region under test, not around code that
+runs device->host conversions on background threads.
+
+Import cost: jax is imported lazily so ``repro.analysis`` stays importable
+in environments without an accelerator stack.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Iterator
+
+# host-conversion entry points on jax's ArrayImpl.  (np.asarray itself
+# reads through the C buffer protocol on CPU and is only caught by the
+# transfer guard on accelerator backends — see module docstring.)
+_CONVERSIONS = ("__array__", "__dlpack__", "__float__", "__int__",
+                "__bool__", "__complex__", "__index__", "item", "tolist")
+
+_STATE = threading.local()          # .explicit: depth of device_get sections
+_PATCH_LOCK = threading.Lock()
+_PATCH_DEPTH = 0                    # nested sync_free regions share patches
+_SAVED: dict = {}
+
+
+class ImplicitHostSyncError(RuntimeError):
+    """An implicit device->host conversion inside a sync_free() region."""
+
+
+def _in_explicit_section() -> bool:
+    return getattr(_STATE, "explicit", 0) > 0
+
+
+@contextlib.contextmanager
+def _explicit_section() -> Iterator[None]:
+    _STATE.explicit = getattr(_STATE, "explicit", 0) + 1
+    try:
+        yield
+    finally:
+        _STATE.explicit -= 1
+
+
+def _make_blocker(name, orig):
+    def blocker(self, *args, **kwargs):
+        if _in_explicit_section():
+            return orig(self, *args, **kwargs)
+        raise ImplicitHostSyncError(
+            f"implicit device->host transfer via `{name}` inside a "
+            f"sync_free() region; drain explicitly with jax.device_get "
+            f"at the window boundary instead")
+    blocker.__name__ = getattr(orig, "__name__", name)
+    return blocker
+
+
+def _install_patches() -> None:
+    import jax
+    from jax._src.array import ArrayImpl
+    _SAVED["device_get"] = jax.device_get
+
+    def explicit_device_get(*args, **kwargs):
+        with _explicit_section():
+            return _SAVED["device_get"](*args, **kwargs)
+
+    jax.device_get = explicit_device_get
+    for name in _CONVERSIONS:
+        orig = getattr(ArrayImpl, name, None)
+        if orig is None:
+            continue
+        _SAVED[name] = orig
+        setattr(ArrayImpl, name, _make_blocker(name, orig))
+
+
+def _remove_patches() -> None:
+    import jax
+    from jax._src.array import ArrayImpl
+    jax.device_get = _SAVED.pop("device_get")
+    for name in _CONVERSIONS:
+        if name in _SAVED:
+            setattr(ArrayImpl, name, _SAVED.pop(name))
+
+
+@contextlib.contextmanager
+def sync_free(level: str = "disallow") -> Iterator[None]:
+    """Disallow *implicit* device->host transfers inside the block.
+
+    ``jax.device_get`` remains allowed (it is the explicit drain);
+    ``float(device_array)``, ``np.asarray(device_array)``, ``.item()`` and
+    friends raise :class:`ImplicitHostSyncError`.  Host-to-device
+    transfers (feeding batches) are untouched.
+    """
+    import jax
+    global _PATCH_DEPTH
+    with jax.transfer_guard_device_to_host(level):
+        with _PATCH_LOCK:
+            if _PATCH_DEPTH == 0:
+                _install_patches()
+            _PATCH_DEPTH += 1
+        try:
+            yield
+        finally:
+            with _PATCH_LOCK:
+                _PATCH_DEPTH -= 1
+                if _PATCH_DEPTH == 0:
+                    _remove_patches()
+
+
+@contextlib.contextmanager
+def no_tracer_leaks() -> Iterator[None]:
+    """Raise on tracers escaping their trace (jax.checking_leaks)."""
+    import jax
+    with jax.checking_leaks():
+        yield
+
+
+@contextlib.contextmanager
+def guarded() -> Iterator[None]:
+    """The full runtime guard: implicit-sync-free + leak-checked."""
+    with sync_free(), no_tracer_leaks():
+        yield
+
+
+def compiled_variant_count(fn) -> int:
+    """Number of compiled variants a jitted callable holds.
+
+    Accepts a raw ``jax.jit`` result or the ``_jit_donated`` wrapper from
+    ``repro.core.trainer`` (which exposes the underlying jitted function as
+    ``_jitted``).  Returns -1 when the running JAX exposes no cache-size
+    API (the sentinel then degrades to a no-op rather than a false alarm).
+    """
+    target = getattr(fn, "_jitted", fn)
+    size = getattr(target, "_cache_size", None)
+    if callable(size):
+        try:
+            return int(size())
+        except Exception:
+            return -1
+    return -1
+
+
+def assert_retrace_bound(fn, expected: int, what: str = "fused step") -> None:
+    """Assert ``fn`` compiled exactly ``expected`` variants.
+
+    The trainer records the window buckets it actually dispatched in
+    ``Trainer.dispatched_buckets``; one bucket must map to exactly one
+    executable per (window-bucket, model-family).  More variants means a
+    silent retrace (shape drift, weak-type flapping, donation mismatch) —
+    each one recompiles the whole scanned window.
+    """
+    got = compiled_variant_count(fn)
+    if got < 0:  # no cache-size API on this JAX: nothing to assert
+        return
+    assert got == expected, (
+        f"{what} compiled {got} variant(s), expected exactly {expected} "
+        f"(one per dispatched window bucket); extra variants are silent "
+        f"retraces of the fused window")

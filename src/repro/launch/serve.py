@@ -52,26 +52,34 @@ def main() -> None:
     capacity = args.window or (args.prompt_len + args.new_tokens +
                                (cfg.num_patches if cfg.arch_type == "vlm"
                                 else 0))
-    prefill = jax.jit(lambda p, b: model.prefill(p, b, capacity))
-    decode = jax.jit(lambda p, c, t: model.decode_step(
-        p, c, t, window=args.window))
+    # greedy selection lives INSIDE the jitted steps: one dispatch per
+    # token, logits never leave the device
+    def _prefill(p, b):
+        logits, cache = model.prefill(p, b, capacity)
+        return cache, jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+
+    def _decode(p, c, t):
+        logits, cache = model.decode_step(p, c, t, window=args.window)
+        return cache, jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+
+    prefill = jax.jit(_prefill)
+    decode = jax.jit(_decode)
 
     t0 = time.time()
-    logits, cache = prefill(params, batch)
-    jax.block_until_ready(logits)
+    cache, next_tok = prefill(params, batch)
+    jax.block_until_ready(next_tok)
     t_prefill = time.time() - t0
-    next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
 
     out_tokens = [next_tok]
     t0 = time.time()
     for _ in range(args.new_tokens - 1):
-        logits, cache = decode(params, cache, next_tok)
-        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        cache, next_tok = decode(params, cache, next_tok)
         out_tokens.append(next_tok)
     jax.block_until_ready(next_tok)
     t_decode = time.time() - t0
 
-    gen = np.stack([np.asarray(t) for t in out_tokens], axis=1)
+    # ONE explicit drain for the whole generation
+    gen = np.stack(jax.device_get(out_tokens), axis=1)
     print(f"prefill: {t_prefill * 1e3:.0f} ms "
           f"({args.batch * args.prompt_len} tokens)")
     print(f"decode:  {t_decode * 1e3:.0f} ms "

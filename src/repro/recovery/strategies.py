@@ -176,7 +176,10 @@ class MergeRecovery(RecoveryStrategy):
             params = recover_stage(before, self.part, event.stage,
                                    self._omegas(state), strategy=reinit,
                                    key=event.key)
-        err = float(recovery_error(before, params, self.part, event.stage))
+        # explicit drain: the recovery error is a host-side metric, and the
+        # failure path must stay legal under the implicit-transfer guard
+        err = float(jax.device_get(
+            recovery_error(before, params, self.part, event.stage)))
         event.hist.recovery_errors.append((event.wall_step, err))
         opt_state = self._zero_stage_moments(state.opt_state, [event.stage])
         return TrainState(params, opt_state, self._boosted(state.lr_scale),
@@ -190,7 +193,8 @@ class MergeRecovery(RecoveryStrategy):
         params = recover_consecutive(before, self.part, run,
                                      self._omegas(state))
         for stage in run:
-            err = float(recovery_error(before, params, self.part, stage))
+            err = float(jax.device_get(
+                recovery_error(before, params, self.part, stage)))
             event.hist.recovery_errors.append((event.wall_step, err))
         opt_state = self._zero_stage_moments(state.opt_state, run)
         return TrainState(params, opt_state, self._boosted(state.lr_scale),

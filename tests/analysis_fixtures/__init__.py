@@ -1,0 +1,3 @@
+# Known-bad / known-good inputs for the repro.analysis rules.  This
+# directory is excluded from normal analyzer runs (DEFAULT_EXCLUDES);
+# tests point the engine at individual files explicitly.

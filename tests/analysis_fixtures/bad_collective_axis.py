@@ -1,0 +1,28 @@
+"""collective-axis-consistency: axis names no Mesh declares."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec
+
+mesh = Mesh(jax.devices(), ("stage",))          # declares only "stage"
+
+
+def all_reduce(x):
+    return jax.lax.psum(x, "stge")               # line 10: typo'd axis
+
+
+def neighbor(x):
+    return jax.lax.ppermute(x, axis_name="pipeline",   # line 14: undeclared
+                            perm=[(0, 1)])
+
+
+def my_index():
+    return jax.lax.axis_index("stages")          # line 19: undeclared
+
+
+SPEC = PartitionSpec("modell", None)             # line 22: undeclared
+
+
+def mean_ok_sum_bad(x):
+    good = jax.lax.pmean(x, "stage")
+    bad = jax.lax.pmax(x, ("stage", "dta"))      # line 27: one axis typo'd
+    return good + bad + jnp.zeros(())

@@ -1,0 +1,26 @@
+"""donation-after-dispatch: reading a buffer after donating it."""
+import jax
+
+
+def loss_fn(params, opt_state, batch):
+    return params, opt_state
+
+
+step = jax.jit(loss_fn, donate_argnums=(0, 1))
+
+
+def read_after_donate(params, opt_state, batch):
+    new_params, new_opt = step(params, opt_state, batch)
+    norm = jax.tree.map(lambda p: p * 0, params)    # line 14: params freed
+    return new_params, new_opt, norm
+
+
+def read_old_opt_state(params, opt_state, batch):
+    params, new_opt = step(params, opt_state, batch)
+    return params, opt_state                        # line 20: opt_state freed
+
+
+def trainer_like(self, batch):
+    out = self.fused_step(self.params, self.opt_state, batch)
+    stale = self.params                             # line 25: donated attr
+    return out, stale

@@ -1,0 +1,39 @@
+"""host-sync-in-jit: every flavor of host round-trip inside traced code."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def jitted_float_cast(x):
+    scale = float(x.mean())          # line 9: float() on a tracer
+    return x * scale
+
+
+@jax.jit
+def jitted_item(x):
+    return x * x.sum().item()        # line 14: .item() host sync
+
+
+@jax.jit
+def jitted_np_asarray(x):
+    host = np.asarray(x)             # line 19: np.asarray on a tracer
+    return jnp.asarray(host)
+
+
+def scan_body(carry, x):
+    jax.device_get(carry)            # line 24: device_get inside scan
+    return carry + x, x
+
+
+def run(xs):
+    return jax.lax.scan(scan_body, jnp.zeros(()), xs)
+
+
+def helper_called_from_jit(x):
+    return int(x[0])                 # line 33: traced transitively
+
+
+@jax.jit
+def jitted_via_helper(x):
+    return helper_called_from_jit(x)

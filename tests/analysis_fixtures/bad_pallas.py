@@ -1,0 +1,32 @@
+"""pallas-contract: BlockSpec/grid mismatches and import-time interpret."""
+import os
+
+import jax.experimental.pallas as pl
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"  # line 6
+FROZEN = os.environ["REPRO_PALLAS_INTERPRET"]    # line 7: both import-time reads
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def arity_mismatch(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(2, 2),
+        in_specs=[pl.BlockSpec((128, 128), lambda i: (i, 0))],   # line 18:
+        out_specs=pl.BlockSpec((128, 128), lambda i, j: (i, j)),  # 1 arg, rank-2 grid
+        out_shape=None,
+    )(x)
+
+
+def rank_mismatch(x):
+    block = (128, 128)
+    return pl.pallas_call(
+        _kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec(block, lambda i: (i,))],  # line 28: returns 1
+        out_specs=pl.BlockSpec(block, lambda i: (i, 0)),  # idx, rank-2 block
+        out_shape=None,
+    )(x)

@@ -1,0 +1,33 @@
+"""prng-key-reuse: keys consumed more than once."""
+import jax
+
+
+def double_draw():
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))      # line 8: key reused
+    return a + b
+
+
+def reuse_in_loop(key, n):
+    outs = []
+    for _ in range(n):
+        outs.append(jax.random.normal(key, (2,)))   # line 15: per-iteration
+    return outs
+
+
+def split_then_reuse_piece(key):
+    ks = jax.random.split(key, 2)
+    a = jax.random.normal(ks[0], (2,))
+    b = jax.random.normal(ks[0], (2,))     # line 22: same split piece twice
+    return a + b
+
+
+def init_then_hand_off(seed):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (2,))
+    return w, make_events(key)             # line 29: consumed again by callee
+
+
+def make_events(key):
+    return jax.random.bernoulli(key, 0.5, (3,))

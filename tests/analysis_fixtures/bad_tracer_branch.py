@@ -1,0 +1,31 @@
+"""tracer-branch: Python control flow on array values in traced code."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def branch_on_reduction(x):
+    loss = jnp.mean(x)
+    if loss > 0:                     # line 9: `if` on a traced value
+        return x
+    return -x
+
+
+@jax.jit
+def while_on_array(x):
+    err = jnp.abs(x)
+    while err.sum() > 1e-3:          # line 17: err is arrayish
+        if err is not None:          # identity check: NOT flagged
+            x = x * 0.5
+        err = jnp.abs(x)
+    return x
+
+
+def cond_body(x):
+    if jnp.max(x) > 1.0:             # line 25: direct jnp call in test
+        return x
+    return x * 2
+
+
+def run(x):
+    return jax.lax.cond(True, cond_body, lambda v: v, x)

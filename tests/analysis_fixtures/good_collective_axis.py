@@ -1,0 +1,14 @@
+"""collective-axis-consistency known-good: declared axes only."""
+import jax
+from jax.sharding import Mesh, PartitionSpec
+
+mesh = Mesh(jax.devices(), ("stage",))
+
+
+def swap(x):
+    total = jax.lax.psum(x, "stage")
+    rolled = jax.lax.ppermute(x, axis_name="stage", perm=[(0, 1)])
+    return total + rolled, jax.lax.axis_index("stage")
+
+
+SPEC = PartitionSpec("stage", None)

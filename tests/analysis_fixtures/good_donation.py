@@ -1,0 +1,22 @@
+"""donation-after-dispatch known-good: rebind over the donated slots."""
+import jax
+
+
+def loss_fn(params, opt_state, batch):
+    return params, opt_state
+
+
+step = jax.jit(loss_fn, donate_argnums=(0, 1))
+
+
+def thread_results(params, opt_state, batches):
+    for batch in batches:
+        # rebinding the donated names each dispatch keeps them live
+        params, opt_state = step(params, opt_state, batch)
+    return params, opt_state
+
+
+def trainer_like(self, batch):
+    self.params, self.opt_state = self.fused_step(
+        self.params, self.opt_state, batch)
+    return self.params

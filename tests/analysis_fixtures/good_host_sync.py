@@ -1,0 +1,17 @@
+"""host-sync-in-jit known-good: syncs on the host side only."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def step(x):
+    return x * jnp.mean(x)           # stays on device
+
+
+def drive(xs):
+    out = step(xs)
+    ring = jax.device_get(out)       # explicit window-boundary drain: host side
+    total = float(np.asarray(ring).sum())
+    n = int(3)                       # constant casts never flagged
+    return total, n

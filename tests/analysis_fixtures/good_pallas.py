@@ -1,0 +1,24 @@
+"""pallas-contract known-good: consistent specs, call-time interpret."""
+import os
+
+import jax.experimental.pallas as pl
+
+
+def interpret_default():
+    # read at dispatch time: flipping the env var mid-process works
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def double(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(2, 2),
+        in_specs=[pl.BlockSpec((128, 128), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((128, 128), lambda i, j: (i, j)),
+        out_shape=None,
+        interpret=interpret_default(),
+    )(x)

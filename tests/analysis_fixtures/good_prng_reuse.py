@@ -1,0 +1,28 @@
+"""prng-key-reuse known-good: split / fold_in between consumptions."""
+import jax
+
+
+def split_draws():
+    key = jax.random.PRNGKey(0)
+    ka, kb = jax.random.split(key)
+    return jax.random.normal(ka, (4,)) + jax.random.uniform(kb, (4,))
+
+
+def fold_in_per_step(key, n):
+    # the blessed derive-many idiom: fold_in never consumes its parent
+    return [jax.random.normal(jax.random.fold_in(key, i), (2,))
+            for i in range(n)]
+
+
+def rebind_each_iteration(key, n):
+    outs = []
+    for _ in range(n):
+        key, sub = jax.random.split(key)
+        outs.append(jax.random.normal(sub, (2,)))
+    return outs
+
+
+def dict_key_param_is_not_a_prng(store, key):
+    # no jax.random use in this function: `key` is a plain mapping key
+    store[key] = 1
+    return store[key], store.get(key)

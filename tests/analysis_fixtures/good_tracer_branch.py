@@ -1,0 +1,18 @@
+"""tracer-branch known-good: structured control flow + identity checks."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def structured(x, init_state=None):
+    if init_state is None:           # optional-arg idiom: identity check
+        init_state = jnp.zeros_like(x)
+    loss = jnp.mean(x)
+    return jnp.where(loss > 0, x, -x) + init_state
+
+
+def host_side(x, threshold):
+    # not traced: plain python branching on a host scalar is fine
+    if threshold > 0:
+        return x
+    return -x

@@ -6,3 +6,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 # NOTE: do NOT set XLA_FLAGS / host device count here — smoke tests and
 # benches must see 1 CPU device; only launch/dryrun.py forces 512.
+
+# runtime enforcement layer: @pytest.mark.runtime_guard / sync_free markers
+# and the `runtime_guard` fixture (see repro.analysis.pytest_plugin)
+from repro.analysis.pytest_plugin import *  # noqa: E402,F401,F403

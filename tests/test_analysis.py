@@ -1,0 +1,231 @@
+"""Tests for the repro.analysis static lint engine.
+
+Per-rule assertions against known-bad/known-good fixtures in
+``tests/analysis_fixtures/``, plus the engine plumbing: inline
+suppressions, baseline workflow, CLI contract, and the self-check that
+the repo's own sources are clean modulo the checked-in baseline.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import baseline as bl
+from repro.analysis import engine
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+FIXTURES = os.path.join(HERE, "analysis_fixtures")
+SRC = os.path.join(REPO, "src")
+
+
+def findings_for(path, rule=None):
+    reports = engine.run_paths([path])
+    out = [f for r in reports for f in r.findings]
+    if rule is not None:
+        out = [f for f in out if f.rule == rule]
+    return out
+
+
+def lines_of(findings):
+    return sorted(f.line for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# per-rule fixtures: known-bad flags at exactly the expected lines,
+# known-good stays silent
+# ---------------------------------------------------------------------------
+
+CASES = [
+    ("host-sync-in-jit", "bad_host_sync.py", [9, 15, 20, 25, 34],
+     "good_host_sync.py"),
+    ("collective-axis-consistency", "bad_collective_axis.py",
+     [10, 14, 19, 22, 27], "good_collective_axis.py"),
+    ("prng-key-reuse", "bad_prng_reuse.py", [8, 15, 22, 29],
+     "good_prng_reuse.py"),
+    ("tracer-branch", "bad_tracer_branch.py", [9, 17, 25],
+     "good_tracer_branch.py"),
+    ("donation-after-dispatch", "bad_donation.py", [14, 20, 25],
+     "good_donation.py"),
+    ("pallas-contract", "bad_pallas.py", [6, 7, 18, 29], "good_pallas.py"),
+]
+
+
+@pytest.mark.parametrize("rule,bad,lines,good", CASES,
+                         ids=[c[0] for c in CASES])
+def test_rule_flags_bad_fixture(rule, bad, lines, good):
+    found = findings_for(os.path.join(FIXTURES, bad), rule)
+    assert lines_of(found) == lines
+    # every finding carries a position and a message
+    for f in found:
+        assert f.col >= 1 and f.message
+
+
+@pytest.mark.parametrize("rule,bad,lines,good", CASES,
+                         ids=[c[0] for c in CASES])
+def test_rule_silent_on_good_fixture(rule, bad, lines, good):
+    assert findings_for(os.path.join(FIXTURES, good)) == []
+
+
+def test_bad_fixtures_trigger_only_their_rule():
+    """Each known-bad file is bad in exactly one way."""
+    for rule, bad, _, _ in CASES:
+        found = findings_for(os.path.join(FIXTURES, bad))
+        assert {f.rule for f in found} == {rule}, bad
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def _write(tmp_path, body):
+    p = tmp_path / "mod.py"
+    p.write_text(body)
+    return str(p)
+
+
+BAD_JIT = ("import jax\n"
+           "@jax.jit\n"
+           "def f(x):\n"
+           "    {line}\n"
+           "    return x\n")
+
+
+def test_suppress_same_line(tmp_path):
+    path = _write(tmp_path, BAD_JIT.format(
+        line="y = float(x)  # repro: allow[host-sync-in-jit]"))
+    assert findings_for(path) == []
+
+
+def test_suppress_line_above(tmp_path):
+    path = _write(tmp_path, BAD_JIT.format(
+        line="# repro: allow[host-sync-in-jit]\n    y = float(x)"))
+    assert findings_for(path) == []
+
+
+def test_suppress_star_and_lists(tmp_path):
+    path = _write(tmp_path, BAD_JIT.format(
+        line="y = float(x)  # repro: allow[*]"))
+    assert findings_for(path) == []
+    path = _write(tmp_path, BAD_JIT.format(
+        line="y = float(x)  # repro: allow[tracer-branch, host-sync-in-jit]"))
+    assert findings_for(path) == []
+
+
+def test_suppress_other_rule_does_not_apply(tmp_path):
+    path = _write(tmp_path, BAD_JIT.format(
+        line="y = float(x)  # repro: allow[tracer-branch]"))
+    assert lines_of(findings_for(path, "host-sync-in-jit")) == [4]
+
+
+# ---------------------------------------------------------------------------
+# baseline workflow
+# ---------------------------------------------------------------------------
+
+def test_baseline_grandfathers_then_shrinks(tmp_path):
+    path = _write(tmp_path, BAD_JIT.format(line="y = float(x)"))
+    found = findings_for(path)
+    assert len(found) == 1
+
+    base = tmp_path / "baseline.json"
+    bl.write_baseline(str(base), found)
+    new, old = bl.split_by_baseline(findings_for(path),
+                                    bl.load_baseline(str(base)))
+    assert new == [] and len(old) == 1
+
+    # editing the flagged line invalidates the fingerprint: finding is new
+    edited = _write(tmp_path, BAD_JIT.format(line="y = float(x + 1)"))
+    engine._SOURCE_CACHE.pop(edited, None)
+    new, old = bl.split_by_baseline(findings_for(edited),
+                                    bl.load_baseline(str(base)))
+    assert len(new) == 1 and old == []
+
+
+def test_fingerprint_survives_line_drift(tmp_path):
+    path = _write(tmp_path, BAD_JIT.format(line="y = float(x)"))
+    fp1 = findings_for(path)[0].fingerprint
+    # prepend a comment block: same content, different line number
+    drifted = _write(tmp_path, "# header\n# header\n" +
+                     BAD_JIT.format(line="y = float(x)"))
+    engine._SOURCE_CACHE.pop(drifted, None)
+    fp2 = findings_for(drifted)[0].fingerprint
+    assert fp1 == fp2
+
+
+# ---------------------------------------------------------------------------
+# CLI contract
+# ---------------------------------------------------------------------------
+
+def run_cli(*argv, cwd=REPO):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        capture_output=True, text=True, env=env, cwd=cwd)
+
+
+def test_cli_strict_fails_on_bad_fixture():
+    bad = os.path.join(FIXTURES, "bad_collective_axis.py")
+    proc = run_cli(bad, "--strict", "--no-baseline")
+    assert proc.returncode == 1
+    # file:line:col findings on stdout
+    assert "bad_collective_axis.py:10:" in proc.stdout
+    assert "collective-axis-consistency" in proc.stdout
+
+
+def test_cli_clean_on_good_fixture():
+    good = os.path.join(FIXTURES, "good_host_sync.py")
+    proc = run_cli(good, "--strict", "--no-baseline")
+    assert proc.returncode == 0
+    assert "clean" in proc.stdout
+
+
+def test_cli_json_format():
+    bad = os.path.join(FIXTURES, "bad_prng_reuse.py")
+    proc = run_cli(bad, "--format", "json", "--no-baseline")
+    assert proc.returncode == 0           # non-strict: report, don't fail
+    data = json.loads(proc.stdout)
+    rules = {f["rule"] for f in data["findings"]}
+    assert rules == {"prng-key-reuse"}
+    for f in data["findings"]:
+        assert f["path"].endswith("bad_prng_reuse.py")
+        assert f["line"] > 0 and f["fingerprint"]
+
+
+def test_cli_rule_selection_and_listing():
+    bad = os.path.join(FIXTURES, "bad_host_sync.py")
+    proc = run_cli(bad, "--strict", "--no-baseline",
+                   "--rules", "tracer-branch")
+    assert proc.returncode == 0           # only the selected rule runs
+    proc = run_cli("--list-rules")
+    assert proc.returncode == 0
+    for rule, _, _, _ in CASES:
+        assert rule in proc.stdout
+    proc = run_cli(bad, "--rules", "no-such-rule")
+    assert proc.returncode == 2
+
+
+# ---------------------------------------------------------------------------
+# self-check: the repo's own sources are clean modulo the baseline
+# ---------------------------------------------------------------------------
+
+def test_repo_sources_clean_modulo_baseline():
+    reports = engine.run_paths(
+        [os.path.join(REPO, d) for d in
+         ("src", "tests", "benchmarks", "examples")])
+    assert not any(r.error for r in reports)
+    findings = [f for r in reports for f in r.findings]
+    baseline = bl.load_baseline(
+        os.path.join(REPO, bl.DEFAULT_BASELINE))
+    new, _ = bl.split_by_baseline(findings, baseline)
+    assert new == [], "\n".join(f.format() for f in new)
+
+
+def test_fixture_dir_excluded_from_directory_walks():
+    files = engine.iter_python_files([HERE])
+    assert not any("analysis_fixtures" in f for f in files)
+    # but explicit file paths bypass the exclusion
+    explicit = os.path.join(FIXTURES, "bad_host_sync.py")
+    assert engine.iter_python_files([explicit]) == [explicit]

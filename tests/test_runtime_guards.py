@@ -1,0 +1,216 @@
+"""Runtime enforcement tests: the sync-free guard, the leak check, the
+pytest markers, and the retrace sentinel.
+
+The load-bearing assertions:
+
+* the fused trainer hot path completes under ``sync_free()`` — its only
+  device->host traffic is the ONE explicit ``jax.device_get`` drain per
+  window (satellite of the window-drain batching);
+* the fused train step compiles exactly once per (window bucket,
+  model family) — any extra compiled variant is a silent retrace.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import runtime
+from repro.analysis.runtime import ImplicitHostSyncError
+from repro.config import (ModelConfig, OptimizerConfig, RecoveryConfig,
+                          SSMConfig, TrainConfig)
+from repro.core.trainer import Trainer
+from repro.data.pipeline import make_batches
+from repro.models.model import build_model
+
+# ---------------------------------------------------------------------------
+# sync_free / no_tracer_leaks primitives
+# ---------------------------------------------------------------------------
+
+
+def test_sync_free_blocks_implicit_casts():
+    x = jnp.ones(())
+    for convert in (lambda: float(x), lambda: int(x * 3),
+                    lambda: bool(x > 0), lambda: x.item(),
+                    lambda: jnp.ones((2,)).tolist()):
+        with pytest.raises(ImplicitHostSyncError, match="sync_free"):
+            with runtime.sync_free():
+                convert()
+
+
+def test_sync_free_allows_explicit_device_get():
+    with runtime.sync_free():
+        host = jax.device_get(jnp.ones((4,)))
+        nested = jax.device_get({"a": jnp.zeros((2,))})
+    assert host.sum() == 4.0
+    assert nested["a"].shape == (2,)
+
+
+def test_sync_free_restores_conversions_after_region():
+    x = jnp.ones(())
+    with runtime.sync_free():
+        pass
+    assert float(x) == 1.0 and x.item() == 1.0
+
+
+def test_sync_free_nesting_keeps_guard_active():
+    with runtime.sync_free():
+        with runtime.sync_free():
+            pass
+        # inner exit must not tear down the outer region's guard
+        with pytest.raises(ImplicitHostSyncError):
+            float(jnp.ones(()))
+    assert float(jnp.ones(())) == 1.0
+
+
+def test_no_tracer_leaks_catches_escaping_tracer():
+    leaked = []
+
+    @jax.jit
+    def f(x):
+        leaked.append(x)          # tracer escapes the trace
+        return x * 2
+
+    with pytest.raises(Exception, match="[Ll]eak"):
+        with runtime.no_tracer_leaks():
+            f(jnp.ones(()))
+
+
+def test_guarded_combines_both():
+    with runtime.guarded():
+        y = jax.jit(lambda v: v + 1)(jnp.ones(()))
+        host = jax.device_get(y)
+    assert host == 2.0
+
+
+# ---------------------------------------------------------------------------
+# pytest plugin: markers + fixture
+# ---------------------------------------------------------------------------
+
+@pytest.mark.sync_free
+def test_sync_free_marker_is_enforced():
+    # the marker wraps this whole test: implicit casts must raise here
+    with pytest.raises(ImplicitHostSyncError):
+        float(jnp.ones(()))
+    assert jax.device_get(jnp.ones(())) == 1.0
+
+
+@pytest.mark.runtime_guard
+def test_runtime_guard_marker_is_enforced():
+    with pytest.raises(ImplicitHostSyncError):
+        jnp.ones(()).item()
+
+
+def test_runtime_guard_fixture_scopes_a_region(runtime_guard):
+    x = jnp.ones(())
+    with runtime_guard.sync_free():
+        y = x + 1
+        host = jax.device_get(y)
+    # outside the region plain casts work again
+    assert float(host) == 2.0 and float(y) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# trainer hot path: sync-free modulo the explicit window drain
+# ---------------------------------------------------------------------------
+
+DENSE = ModelConfig(
+    name="guard-llama", arch_type="dense", num_layers=4, d_model=32,
+    num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=128, max_seq_len=32,
+    dtype="float32", param_dtype="float32")
+SSM = ModelConfig(
+    name="guard-mamba", arch_type="ssm", num_layers=4, d_model=32,
+    num_heads=0, num_kv_heads=0, d_ff=0, vocab_size=128, max_seq_len=32,
+    ssm=SSMConfig(state_dim=8, head_dim=8, expand=2, conv_width=2,
+                  chunk_size=8, ngroups=1),
+    dtype="float32", param_dtype="float32")
+FAMILIES = {"dense": DENSE, "ssm": SSM}
+
+
+class ForcedSchedule:
+    def __init__(self, events):
+        self._events = dict(events)
+
+    def at(self, step):
+        return self._events.get(step, [])
+
+
+def make_trainer(cfg=DENSE, *, strategy="none", window=8, steps=16,
+                 events=None):
+    rcfg = RecoveryConfig(strategy=strategy, num_stages=4)
+    tcfg = TrainConfig(
+        global_batch=4, microbatch=4, seq_len=32, steps=steps,
+        eval_every=100, fuse_window=window,
+        optimizer=OptimizerConfig(lr=1e-3, total_steps=steps,
+                                  warmup_steps=2),
+        recovery=rcfg)
+    return Trainer(build_model(cfg), tcfg,
+                   schedule=ForcedSchedule(events) if events else None)
+
+
+def test_hot_path_is_sync_free_modulo_window_drain():
+    """The fused loop's only device->host traffic is the explicit
+    one-device_get-per-window drain: the whole run passes under the
+    implicit-transfer guard."""
+    trainer = make_trainer()
+    with runtime.sync_free():
+        state, hist = trainer.run(make_batches(DENSE, batch=4, seq=32,
+                                               seed=0))
+    assert hist.wall_iters == 16
+    assert hist.dispatches == 2          # two full windows of 8
+    assert len(hist.loss) == 16          # drained metrics all arrived
+    assert np.isfinite(hist.loss).all()
+
+
+def test_hot_path_sync_free_with_recovery_strategy():
+    """CheckFree recovery (failure at step 5) stays inside the guard too:
+    recovery is collectives + device ops, not host round-trips."""
+    trainer = make_trainer(strategy="checkfree", steps=10,
+                           events={5: [1]})
+    with runtime.sync_free():
+        state, hist = trainer.run(make_batches(DENSE, batch=4, seq=32,
+                                               seed=0))
+    assert hist.failures == [(5, 1)]
+    assert len(hist.recovery_errors) == 1
+    assert hist.wall_iters == 10
+
+
+# ---------------------------------------------------------------------------
+# retrace sentinel: one compiled variant per (window bucket, model family)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_fused_step_compiles_once_per_bucket(family):
+    trainer = make_trainer(FAMILIES[family])
+    trainer.run(make_batches(FAMILIES[family], batch=4, seq=32, seed=0))
+    assert trainer.dispatched_buckets == {8}
+    runtime.assert_retrace_bound(
+        trainer.fused_step, len(trainer.dispatched_buckets),
+        what=f"{family} fused step")
+
+
+def test_fused_step_variants_track_truncated_windows():
+    """A mid-window failure forces shorter window buckets; each bucket
+    compiles exactly once and nothing else retraces."""
+    trainer = make_trainer(strategy="checkfree", steps=10, events={3: [1]})
+    trainer.run(make_batches(DENSE, batch=4, seq=32, seed=0))
+    assert len(trainer.dispatched_buckets) > 1   # 8 plus truncation buckets
+    runtime.assert_retrace_bound(trainer.fused_step,
+                                 len(trainer.dispatched_buckets))
+
+
+def test_retrace_bound_fails_on_extra_variant():
+    trainer = make_trainer()
+    trainer.run(make_batches(DENSE, batch=4, seq=32, seed=0))
+    with pytest.raises(AssertionError, match="silent retraces"):
+        runtime.assert_retrace_bound(
+            trainer.fused_step, len(trainer.dispatched_buckets) + 1)
+
+
+def test_compiled_variant_count_counts_shapes():
+    jitted = jax.jit(lambda v: v * 2)
+    assert runtime.compiled_variant_count(jitted) in (-1, 0)
+    jitted(jnp.ones((2,)))
+    jitted(jnp.ones((3,)))                      # second shape -> retrace
+    count = runtime.compiled_variant_count(jitted)
+    if count >= 0:                              # cache API present
+        assert count == 2

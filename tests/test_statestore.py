@@ -97,10 +97,10 @@ def test_host_snapshot_batched_device_get_bit_identical():
     """The whole-pytree ``jax.device_get`` fast path must produce snapshots
     bit-identical to per-leaf copies, with owned (donation-safe) host
     buffers, across mixed dtypes/shapes."""
-    key = jax.random.PRNGKey(0)
+    kw, kb = jax.random.split(jax.random.PRNGKey(0))
     tree = {
-        "w": jax.random.normal(key, (7, 33), jnp.float32),
-        "b16": jax.random.normal(key, (4, 130)).astype(jnp.bfloat16),
+        "w": jax.random.normal(kw, (7, 33), jnp.float32),
+        "b16": jax.random.normal(kb, (4, 130)).astype(jnp.bfloat16),
         "idx": jnp.arange(11, dtype=jnp.int32),
         "nested": {"scalar": jnp.float32(3.25),
                    "host": np.linspace(0, 1, 9, dtype=np.float64)},
