@@ -66,6 +66,26 @@ EVAL_BATCHES = 2
 SCHEDULE_ITER_TIME_S = 300.0
 
 
+def env_fingerprint() -> Dict[str, Any]:
+    """The environment a result was measured under — stamped into every
+    results JSON so numbers from different hosts/backends are never
+    compared silently (CPU-interpret vs TPU runs differ by orders of
+    magnitude)."""
+    import platform
+
+    import jax
+    devs = jax.devices()
+    return dict(
+        jax=jax.__version__,
+        numpy=np.__version__,
+        python=platform.python_version(),
+        backend=jax.default_backend(),
+        device_kind=devs[0].device_kind if devs else "none",
+        device_count=len(devs),
+        pallas_interpret=os.environ.get("REPRO_PALLAS_INTERPRET", ""),
+    )
+
+
 def data_source() -> SyntheticLM:
     return SyntheticLM(BENCH_MODEL.vocab_size, seed=DATA_SEED)
 
@@ -169,6 +189,7 @@ def run_strategy(*, strategy: str, rate: Optional[float] = None,
     rec = dict(
         params_path=path.replace(".json", "_params.npz"),
         config=kw,
+        env=env_fingerprint(),
         entropy_floor=data_source().entropy_floor,
         steps=hist.steps, wall_time=hist.wall_time, loss=hist.loss,
         eval_loss=hist.eval_loss, failures=hist.failures,
@@ -229,6 +250,8 @@ def smooth(xs: List[float], k: int = 9) -> np.ndarray:
 
 
 def save_json(name: str, obj: Any) -> str:
+    if isinstance(obj, dict) and "env" not in obj:
+        obj = dict(obj, env=env_fingerprint())
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, name)
     with open(path, "w") as f:

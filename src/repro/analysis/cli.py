@@ -53,12 +53,13 @@ def main(argv: Optional[List[str]] = None) -> int:
     if args.list_rules:
         width = max(len(r) for r in rules)
         for rid, rule in sorted(rules.items()):
-            print(f"{rid.ljust(width)}  {rule.doc}")
+            print(f"{rid.ljust(width)}  {rule.doc}")  # repro: allow[no-bare-print]
         return 0
     if args.rules:
         wanted = {r.strip() for r in args.rules.split(",") if r.strip()}
         unknown = wanted - set(rules)
         if unknown:
+            # repro: allow[no-bare-print]
             print(f"unknown rule(s): {', '.join(sorted(unknown))}",
                   file=sys.stderr)
             return 2
@@ -72,6 +73,7 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     if args.write_baseline:
         bl.write_baseline(args.baseline, findings)
+        # repro: allow[no-bare-print]
         print(f"wrote {len(findings)} finding(s) to {args.baseline}")
         return 0
 
@@ -79,7 +81,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     new, old = bl.split_by_baseline(findings, baseline)
 
     if args.format == "json":
-        print(json.dumps({
+        print(json.dumps({  # repro: allow[no-bare-print]
             "files": len(reports),
             "findings": [f.to_json() for f in new],
             "baselined": [f.to_json() for f in old],
@@ -88,12 +90,12 @@ def main(argv: Optional[List[str]] = None) -> int:
         }, indent=1))
     else:
         for f in new:
-            print(f.format())
+            print(f.format())  # repro: allow[no-bare-print]
         for r in errors:
-            print(f"{r.path}: {r.error}", file=sys.stderr)
+            print(f"{r.path}: {r.error}", file=sys.stderr)  # repro: allow[no-bare-print]
         tail = (f"{len(reports)} file(s): {len(new)} finding(s)"
                 f" ({len(old)} baselined, {nsupp} suppressed)")
-        print(tail if new or old or nsupp else
+        print(tail if new or old or nsupp else  # repro: allow[no-bare-print]
               f"{len(reports)} file(s): clean")
     if errors:
         return 2

@@ -23,6 +23,7 @@ Each rule guards an invariant a prior PR introduced (see
 from __future__ import annotations
 
 import ast
+import os
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from repro.analysis.engine import (Finding, ModuleIndex, ProjectContext,
@@ -762,3 +763,34 @@ class PallasContract(Rule):
                             index, node,
                             "REPRO_PALLAS_INTERPRET read at import time; "
                             "read it at call time instead")
+
+
+# ---------------------------------------------------------------------------
+# no-bare-print
+# ---------------------------------------------------------------------------
+
+@register_rule
+class NoBarePrint(Rule):
+    id = "no-bare-print"
+    doc = ("bare print() in src/repro library code; route output through "
+           "repro.telemetry.log (CLI output lines may suppress)")
+
+    def check(self, index: ModuleIndex,
+              project: ProjectContext) -> Iterable[Finding]:
+        # library code only: the rule applies to files under a src/repro
+        # directory pair (relative or absolute paths both resolve), which
+        # leaves tests, benchmarks, examples, and fixtures free to print
+        parts = os.path.normpath(os.path.abspath(index.path)).split(os.sep)
+        if not any(a == "src" and b == "repro"
+                   for a, b in zip(parts, parts[1:])):
+            return
+        for node in ast.walk(index.tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id == "print"):
+                yield self.finding(
+                    index, node,
+                    "bare print() in library code; use "
+                    "repro.telemetry.log(...) (verbosity knob + mirrored "
+                    "into the event stream), or mark deliberate CLI "
+                    "output with `# repro: allow[no-bare-print]`")

@@ -3,7 +3,8 @@ strategies (kept free of trainer imports so ``repro.recovery`` can construct
 :class:`TrainState` without a cycle)."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import json
+from dataclasses import asdict, dataclass, field
 from typing import Any, List, Optional, Tuple
 
 import numpy as np
@@ -38,3 +39,25 @@ class History:
                                  # window size)
     truncated: bool = False      # hit the trainer's max_wall safety bound
                                  # before reaching the target step count
+
+    # ---- serialization -----------------------------------------------
+    def to_json(self) -> str:
+        """JSON round-trip partner of :meth:`from_json` (every field; the
+        tuple-valued series become arrays)."""
+        return json.dumps(asdict(self))
+
+    @classmethod
+    def from_json(cls, s: str) -> "History":
+        d = json.loads(s)
+        return cls(
+            steps=list(d.get("steps", [])),
+            wall_time=list(d.get("wall_time", [])),
+            loss=list(d.get("loss", [])),
+            eval_loss=[tuple(x) for x in d.get("eval_loss", [])],
+            failures=[tuple(x) for x in d.get("failures", [])],
+            recovery_errors=[tuple(x)
+                             for x in d.get("recovery_errors", [])],
+            wall_iters=int(d.get("wall_iters", 0)),
+            dispatches=int(d.get("dispatches", 0)),
+            truncated=bool(d.get("truncated", False)),
+        )

@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.config import OptimizerConfig, TrainConfig
 from repro.core.failures import FailureSchedule
 from repro.core.stages import StagePartition
@@ -325,6 +326,16 @@ class Trainer:
             for eb in eval_batches] if eval_batches else None
         self._prefetch = WindowPrefetcher(batches)
 
+        # per-family FLOP estimate (6 * active params * tokens for training)
+        # — what the report CLI turns into an MFU figure
+        tokens = tcfg.global_batch * tcfg.seq_len
+        telemetry.emit(
+            "run_start", arch=self.model.cfg.name, strategy=strategy.name,
+            backend=self.backend, steps=tcfg.steps,
+            num_stages=self.rcfg.num_stages,
+            flops_per_step=6 * self.model.cfg.active_param_count() * tokens,
+            tokens_per_step=tokens)
+
         wall_step = 0
         max_wall = tcfg.steps * 10  # safety bound for rollback-heavy runs
         try:
@@ -341,11 +352,19 @@ class Trainer:
             # the max_wall safety bound fired: the run is NOT converged, and
             # rollback-heavy sweeps must not masquerade as such
             hist.truncated = True
+            telemetry.emit(
+                "truncation", wall_iters=wall_step,
+                effective_step=state.effective_step, target_steps=tcfg.steps)
             warnings.warn(
                 f"Trainer.run truncated at max_wall={max_wall} wall "
                 f"iterations (effective_step={state.effective_step}/"
                 f"{tcfg.steps}); results are incomplete", RuntimeWarning,
                 stacklevel=2)
+        telemetry.emit(
+            "run_end", effective_steps=state.effective_step,
+            wall_iters=hist.wall_iters, dispatches=hist.dispatches,
+            failures=len(hist.failures), truncated=hist.truncated,
+            clock_s=clock)
         return state, hist
 
     def _handle_failures(self, state: TrainState, hist: History,
@@ -367,24 +386,30 @@ class Trainer:
             event = FailureContext(stage=run[0], wall_step=wall_step,
                                    key=sub, hist=hist)
             if len(run) > 1 and strategy.handles_consecutive:
-                state = strategy.on_consecutive(state, run, event)
+                state = strategy.handle_consecutive(state, run, event)
             else:
                 for stage in run:
-                    state = strategy.on_failure(
+                    state = strategy.handle_failure(
                         state, dataclasses.replace(event, stage=stage))
             for stage in run:
                 hist.failures.append((wall_step, stage))
-                clock += strategy.failure_cost()
+                cost = strategy.failure_cost()
+                clock += cost
                 # store-backed strategies report the actual serialized
                 # bytes shipped to the replacement node; drained
                 # unconditionally (the per-event queue must stay in
                 # lockstep with failure_cost even when the schedule has no
                 # repricing hook)
                 nbytes = strategy.consume_restore_bytes()
+                overhead = 0.0
                 if failure_overhead is not None:
-                    clock += (failure_overhead(wall_step, stage)
-                              if nbytes is None else
-                              failure_overhead(wall_step, stage, nbytes))
+                    overhead = (failure_overhead(wall_step, stage)
+                                if nbytes is None else
+                                failure_overhead(wall_step, stage, nbytes))
+                    clock += overhead
+                telemetry.emit("failure", wall_step=wall_step, stage=stage,
+                               cost_s=cost, overhead_s=overhead,
+                               nbytes=nbytes)
         return state, clock, key
 
     def _loop(self, verbose, state, hist, clock, wall_step, max_wall, key):
@@ -412,13 +437,22 @@ class Trainer:
                 state, clock, key = self._handle_failures(
                     state, hist, clock, wall_step, key, failure_overhead)
 
-            # 2) fused window: K steps, one dispatch, zero interior syncs
+            # 2) fused window: K steps, one dispatch, zero interior syncs.
+            #    The dispatch span uses the manual clock/complete pattern —
+            #    a `with` block around a donating call would make the
+            #    donation-liveness lint see the donated-arg read and the
+            #    re-dispatch as one statement (and it is a no-op two-call
+            #    path when telemetry is disabled anyway).
             k = self._window_size(wall_step, state.effective_step, max_wall)
             stacked = self._prefetch.take(state.effective_step, k)
+            t0 = telemetry.clock()
             params, opt_state, lr_scale, outs = self.fused_step(
                 state.params, state.opt_state,
                 {kk: jnp.asarray(v) for kk, v in stacked.items()},
                 state.lr_scale)
+            telemetry.complete("window_dispatch", t0, cat="trainer",
+                               k=k, wall_step=wall_step,
+                               backend=self.backend)
             hist.dispatches += 1
             self.dispatched_buckets.add(k)
 
@@ -432,7 +466,8 @@ class Trainer:
 
             # 3) drain the window: ONE host sync for K steps of metrics
             #    (the lr-scale carry rides the same transfer as the rings)
-            ring, lr_scale = jax.device_get((outs, lr_scale))
+            with telemetry.span("window_drain", cat="trainer", k=k):
+                ring, lr_scale = jax.device_get((outs, lr_scale))
             lr_scale = float(lr_scale)
             losses = ring["loss"]
             state = TrainState(params, opt_state, lr_scale,
@@ -441,16 +476,22 @@ class Trainer:
 
             # 4) host-side bookkeeping, per wall iteration, in the exact
             #    order the eager loop used (telemetry -> pricing -> hist)
+            stretch = 0.0
             for i in range(k):
                 if i > 0 and observed_rate is not None:
                     strategy.observe_environment(
                         observed_rate(wall_step + i))
-                clock += strategy.iteration_cost() * (
-                    iter_factor(wall_step + i)
-                    if iter_factor is not None else 1.0)
+                factor = (iter_factor(wall_step + i)
+                          if iter_factor is not None else 1.0)
+                clock += strategy.iteration_cost() * factor
+                stretch += factor
                 hist.steps.append(state.effective_step - k + i + 1)
                 hist.wall_time.append(clock)
                 hist.loss.append(float(losses[i]))
+            telemetry.emit("step_window", wall_step=wall_step, k=k,
+                           effective_step=state.effective_step,
+                           loss=float(losses[-1]), clock_s=clock,
+                           stretch=stretch / k)
 
             # 5) strategy bookkeeping on the drained state (checkpoint
             #    saves, adaptive windows...); interior steps were certified
@@ -465,10 +506,13 @@ class Trainer:
                     float(self.eval_step(state.params, eb))
                     for eb in self._eval_batches]))
                 hist.eval_loss.append((state.effective_step, clock, el))
+                telemetry.emit("eval", step=state.effective_step, loss=el,
+                               clock_s=clock)
                 if verbose:
-                    print(f"  step {state.effective_step:4d} "
-                          f"wall {clock/3600:7.2f}h loss "
-                          f"{losses[-1]:.3f} eval {el:.3f}")
+                    telemetry.log(
+                        f"  step {state.effective_step:4d} "
+                        f"wall {clock/3600:7.2f}h loss "
+                        f"{losses[-1]:.3f} eval {el:.3f}")
             wall_step += k
 
         return state, hist, clock, wall_step

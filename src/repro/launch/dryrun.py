@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import INPUT_SHAPES, InputShape, ModelConfig, OptimizerConfig
+from repro.telemetry import log
 from repro.configs import ARCHS, arch_ids, get_config
 from repro.launch import shardings as SH
 from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
@@ -305,7 +306,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                 rec.update({"status": "lowered",
                             "lower_s": round(t1 - t0, 1)})
                 if verbose:
-                    print(f"[ok] {arch:22s} {shape_name:12s} "
+                    log(f"[ok] {arch:22s} {shape_name:12s} "
                           f"{rec['mesh']:8s} lowered in "
                           f"{rec['lower_s']:6.1f}s (smoke)")
                 return rec
@@ -368,7 +369,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         })
         if verbose:
             mb = rec["memory"]["peak_est_B"] / 2**30
-            print(f"[ok] {arch:22s} {shape_name:12s} {rec['mesh']:8s} "
+            log(f"[ok] {arch:22s} {shape_name:12s} {rec['mesh']:8s} "
                   f"compile {rec['compile_s']:6.1f}s mem/dev {mb:7.2f}GiB "
                   f"c/m/coll {compute_s:.2e}/{memory_s:.2e}/{coll_s:.2e}s "
                   f"dom={dominant} useful={rec['roofline']['useful_ratio']:.2f}")
@@ -377,7 +378,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-2000:]
         if verbose:
-            print(f"[ERR] {arch} {shape_name}: {rec['error'][:200]}")
+            log(f"[ERR] {arch} {shape_name}: {rec['error'][:200]}")
     return rec
 
 
@@ -403,13 +404,13 @@ def main() -> None:
         for mp in (False, True):
             prod = make_production_mesh(multi_pod=mp)
             pipe = make_pipeline_mesh(num_stages=8, multi_pod=mp)
-            print(f"[mesh ok] multi_pod={mp} production={dict(prod.shape)} "
+            log(f"[mesh ok] multi_pod={mp} production={dict(prod.shape)} "
                   f"pipeline={dict(pipe.shape)}")
         rec = run_one("paper-llama-124m", "train_4k", lower_only=True)
         if rec["status"] != "lowered":
-            print(rec.get("error", rec))
+            log(str(rec.get("error", rec)))
             raise SystemExit(1)
-        print("=== mesh smoke OK ===")
+        log("=== mesh smoke OK ===")
         return
 
     archs = arch_ids() if args.arch == "all" else args.arch.split(",")
@@ -426,7 +427,7 @@ def main() -> None:
     ok = sum(r["status"] == "ok" for r in results)
     sk = sum(r["status"] == "skipped" for r in results)
     err = sum(r["status"] == "error" for r in results)
-    print(f"\n=== dry-run complete: {ok} ok / {sk} skipped / {err} errors "
+    log(f"\n=== dry-run complete: {ok} ok / {sk} skipped / {err} errors "
           f"over {len(results)} pairs ===")
     if err:
         raise SystemExit(1)

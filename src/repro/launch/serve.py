@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, PAPER_MODELS, get_config, reduced
+from repro.telemetry import log
 from repro.data.pipeline import SyntheticLM, batch_for
 from repro.models.model import build_model
 
@@ -39,7 +40,7 @@ def main() -> None:
         cfg = reduced(cfg)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    print(f"serving {cfg.name}: {cfg.param_count() / 1e6:.1f}M params, "
+    log(f"serving {cfg.name}: {cfg.param_count() / 1e6:.1f}M params, "
           f"batch={args.batch} prompt={args.prompt_len} "
           f"new={args.new_tokens} window={args.window or 'full'}")
 
@@ -80,13 +81,13 @@ def main() -> None:
 
     # ONE explicit drain for the whole generation
     gen = np.stack(jax.device_get(out_tokens), axis=1)
-    print(f"prefill: {t_prefill * 1e3:.0f} ms "
+    log(f"prefill: {t_prefill * 1e3:.0f} ms "
           f"({args.batch * args.prompt_len} tokens)")
-    print(f"decode:  {t_decode * 1e3:.0f} ms "
+    log(f"decode:  {t_decode * 1e3:.0f} ms "
           f"({args.batch * (args.new_tokens - 1)} tokens, "
           f"{(args.new_tokens - 1) / max(t_decode, 1e-9):.1f} tok/s/seq)")
     for i in range(min(args.batch, 2)):
-        print(f"  seq{i}: prompt={raw[i, :8].tolist()}... "
+        log(f"  seq{i}: prompt={raw[i, :8].tolist()}... "
               f"gen={gen[i].tolist()}")
     assert np.isfinite(gen).all()
 

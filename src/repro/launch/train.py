@@ -14,9 +14,10 @@ failure schedule -> Trainer (recovery strategy) and reports the History.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 
+from repro import telemetry
+from repro.telemetry import log
 from repro.config import OptimizerConfig, RecoveryConfig, TrainConfig
 from repro.configs import ARCHS, PAPER_MODELS, get_config, get_stages, reduced
 from repro.core.failures import FailureSchedule
@@ -59,8 +60,23 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true",
                     help="CPU-sized variant of the same family")
     ap.add_argument("--out", default="", help="write History JSON here")
+    ap.add_argument("--telemetry-dir", default="",
+                    help="record the structured telemetry event stream "
+                         "(events.jsonl) into this directory; summarize "
+                         "with `python -m repro.telemetry.report <dir>` "
+                         "(see docs/observability.md)")
+    ap.add_argument("--trace", action="store_true",
+                    help="also export a Chrome trace_event JSON "
+                         "(trace.json, loadable in Perfetto) into "
+                         "--telemetry-dir")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args()
+
+    rec = None
+    if args.telemetry_dir:
+        rec = telemetry.configure(run_dir=args.telemetry_dir)
+    elif args.trace:
+        ap.error("--trace needs --telemetry-dir")
 
     cfg = get_config(args.arch)
     stages = args.stages or get_stages(args.arch)
@@ -93,9 +109,9 @@ def main() -> None:
 
     model = build_model(cfg)
     n = cfg.param_count()
-    print(f"arch={cfg.name} ({n / 1e6:.0f}M params) strategy={args.strategy} "
-          f"backend={args.backend} stages={stages} steps={args.steps} "
-          f"rate={args.rate:.0%}/h seq={seq} batch={args.batch}")
+    log(f"arch={cfg.name} ({n / 1e6:.0f}M params) strategy={args.strategy} "
+        f"backend={args.backend} stages={stages} steps={args.steps} "
+        f"rate={args.rate:.0%}/h seq={seq} batch={args.batch}")
 
     schedule = None
     if args.scenario:
@@ -105,7 +121,7 @@ def main() -> None:
             rate_per_hour=args.rate, iteration_time_s=rcfg.iteration_time_s,
             num_stages=stages, steps=args.steps * 10, seed=args.seed,
             protect_edges=rcfg.protect_edge_stages)
-        print(schedule.summary())
+        log(schedule.summary())
 
     src = SyntheticLM(cfg.vocab_size, seed=1234)
     batches = make_batches(cfg, batch=args.batch, seq=seq, seed=args.seed,
@@ -117,23 +133,29 @@ def main() -> None:
     trainer = Trainer(model, tcfg, wall=WallClockModel(
         model_bytes=4 * n * 2), schedule=schedule, backend=args.backend)
     if args.scenario and trainer.schedule is not None:
-        print(trainer.schedule.summary())
+        log(trainer.schedule.summary())
     state, hist = trainer.run(batches, evals, verbose=not args.quiet)
 
-    print(f"\ndone: {state.effective_step} effective steps over "
-          f"{hist.wall_iters} wall iterations, "
-          f"{len(hist.failures)} stage failures, final loss "
-          f"{hist.loss[-1]:.4f}, modelled wall "
-          f"{hist.wall_time[-1] / 3600:.1f}h")
+    log(f"\ndone: {state.effective_step} effective steps over "
+        f"{hist.wall_iters} wall iterations, "
+        f"{len(hist.failures)} stage failures, final loss "
+        f"{hist.loss[-1]:.4f}, modelled wall "
+        f"{hist.wall_time[-1] / 3600:.1f}h", level=0)
     for (step, err) in hist.recovery_errors:
-        print(f"  recovery @ wall-iter {step}: error term {err:.3e}")
+        log(f"  recovery @ wall-iter {step}: error term {err:.3e}")
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
-            json.dump({"loss": hist.loss, "eval": hist.eval_loss,
-                       "wall": hist.wall_time, "failures": hist.failures,
-                       "recovery_errors": hist.recovery_errors}, f)
-        print(f"history -> {args.out}")
+            f.write(hist.to_json())
+        log(f"history -> {args.out}")
+    if rec is not None:
+        if args.trace:
+            log(f"trace -> {rec.write_chrome_trace()}")
+        rec.close()
+        telemetry.set_recorder(None)
+        log(f"telemetry -> {os.path.join(args.telemetry_dir, 'events.jsonl')}"
+            f"  (summarize: python -m repro.telemetry.report "
+            f"{args.telemetry_dir})")
 
 
 if __name__ == "__main__":

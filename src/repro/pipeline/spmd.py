@@ -62,6 +62,7 @@ try:
 except (TypeError, ValueError):  # pragma: no cover — exotic wrappers
     pass
 
+from repro import telemetry
 from repro.config import ModelConfig, OptimizerConfig
 from repro.core.stages import StagePartition
 from repro.core.swap import stage_permutations
@@ -387,7 +388,17 @@ def make_spmd_fused_train_step(model, opt_cfg: OptimizerConfig,
             **_NO_CHECK_KW)
         return f(params, opt_state, stacked, lr_scale)
 
-    return fused_step
+    # host-side dispatch span (repro.telemetry): times the enqueue of the
+    # sharded window, never runs inside traced code.  ``functools.wraps``
+    # carries the ``_jitted`` attribute across, which the retrace sentinel
+    # (repro.analysis.runtime.compiled_variant_count) introspects.
+    @functools.wraps(fused_step)
+    def dispatch(*args):
+        with telemetry.span("spmd_window_dispatch", cat="pipeline",
+                            stages=K):
+            return fused_step(*args)
+
+    return dispatch
 
 
 # ---------------------------------------------------------------------------

@@ -51,6 +51,8 @@ from typing import Any, Callable, ClassVar, List, Optional, Tuple, TYPE_CHECKING
 
 import jax
 
+from repro import telemetry
+
 if TYPE_CHECKING:  # pragma: no cover — typing only, no import cycles
     from repro.config import RecoveryConfig
     from repro.core.state import History, TrainState
@@ -112,6 +114,40 @@ class RecoveryStrategy:
         every policy run unmodified on either backend."""
         self._in_mesh_recover = recover_fn
         return self
+
+    # ---- instrumented entry points (what the trainer calls) ----------
+    def handle_failure(self, state: "TrainState",
+                       event: FailureContext) -> "TrainState":
+        """:meth:`on_failure` wrapped in a host-side trace span and a
+        structured ``recovery`` event (``repro.telemetry``).  The trainer
+        routes failures through here so every policy's recovery execution
+        is measured uniformly; subclasses keep overriding
+        :meth:`on_failure` and never need to touch this."""
+        t0 = telemetry.clock()
+        state = self.on_failure(state, event)
+        duration = telemetry.clock() - t0
+        telemetry.complete("recovery", t0, cat="recovery",
+                           strategy=self.name, stage=event.stage)
+        telemetry.emit("recovery", wall_step=event.wall_step,
+                       stage=event.stage, strategy=self.name,
+                       duration_s=duration, stages=[event.stage])
+        return state
+
+    def handle_consecutive(self, state: "TrainState", run: List[int],
+                           event: FailureContext) -> "TrainState":
+        """:meth:`on_consecutive` with the same span + event treatment as
+        :meth:`handle_failure` (one ``recovery`` event for the whole
+        adjacent-stage run)."""
+        t0 = telemetry.clock()
+        state = self.on_consecutive(state, run, event)
+        duration = telemetry.clock() - t0
+        telemetry.complete("recovery", t0, cat="recovery",
+                           strategy=self.name, stage=event.stage,
+                           stages=len(run))
+        telemetry.emit("recovery", wall_step=event.wall_step,
+                       stage=event.stage, strategy=self.name,
+                       duration_s=duration, stages=list(run))
+        return state
 
     # ---- lifecycle ---------------------------------------------------
     def on_failure(self, state: "TrainState",

@@ -31,6 +31,7 @@ from typing import List, Optional, Union
 
 import numpy as np
 
+from repro import telemetry
 from repro.core.walltime import WallClockModel
 from repro.sim.cluster import Cluster, SimResult
 from repro.sim.scenario import ScenarioConfig, get_scenario
@@ -135,4 +136,9 @@ def simulate(scenario: Union[str, ScenarioConfig], *, steps: int,
     wall = wall or WallClockModel()
     cluster = Cluster(scenario, steps=steps, seed=seed,
                       stage_bytes=wall.stage_bytes(scenario.num_stages))
-    return SimFailureSchedule(cluster.run(), rate_window=rate_window)
+    result = cluster.run()
+    telemetry.emit("sim_run", scenario=scenario.name, steps=steps,
+                   events=len(result.events),
+                   suppressed=len(result.suppressed),
+                   total_hours=result.total_hours)
+    return SimFailureSchedule(result, rate_window=rate_window)

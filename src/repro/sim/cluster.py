@@ -30,6 +30,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import telemetry
 from repro.core.failures import FailureEvent
 from repro.sim.node import Node
 from repro.sim.processes import FailureProcess, make_process
@@ -125,6 +126,7 @@ class Cluster:
         times = np.zeros(self.steps, np.float64)
         log = []
 
+        t_span = telemetry.clock()
         t_h = 0.0
         for step in range(self.steps):
             # 1) finished restarts rejoin their stage
@@ -134,6 +136,8 @@ class Cluster:
                     self.nodes[stage] = node
                     del self._restarting[stage]
                     log.append(("rejoin", step, stage, node.node_id))
+                    telemetry.emit("sim_node", what="rejoin", step=step,
+                                   stage=stage, node_id=node.node_id)
 
             # 2) this iteration runs at the slowest participant's pace
             factor = max(self._effective_slowdown(s)
@@ -166,18 +170,30 @@ class Cluster:
                     event_costs[(step, stage)] = (0.0, dead.bandwidth_Bps)
                     ready = t_h + dt_h + dead.restart_latency_s / 3600.0
                     self._restarting[stage] = (dead, ready)
+                    replacement = None
                 else:  # respawn: a fresh node replaces it immediately
-                    new = self._fresh_node(t_h)
+                    replacement = self._fresh_node(t_h)
                     overheads[(step, stage)] = (
-                        new.restart_latency_s
-                        + new.transfer_time_s(self.stage_bytes))
-                    event_costs[(step, stage)] = (new.restart_latency_s,
-                                                  new.bandwidth_Bps)
-                    self.nodes[stage] = new
-                    log.append(("respawn", step, stage, new.node_id))
+                        replacement.restart_latency_s
+                        + replacement.transfer_time_s(self.stage_bytes))
+                    event_costs[(step, stage)] = (
+                        replacement.restart_latency_s,
+                        replacement.bandwidth_Bps)
+                    self.nodes[stage] = replacement
+                telemetry.emit("sim_node", what="fail", step=step,
+                               stage=stage, node_id=dead.node_id,
+                               overhead_s=overheads[(step, stage)])
+                if replacement is not None:
+                    log.append(("respawn", step, stage,
+                                replacement.node_id))
+                    telemetry.emit("sim_node", what="respawn", step=step,
+                                   stage=stage,
+                                   node_id=replacement.node_id)
 
             t_h += dt_h
 
+        telemetry.complete("sim_run", t_span, cat="sim", scenario=sc.name,
+                           steps=self.steps, events=len(events))
         return SimResult(scenario=sc, steps=self.steps, seed=self.seed,
                          num_stages=sc.num_stages,
                          protect_edges=sc.protect_edges,

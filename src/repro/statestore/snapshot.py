@@ -18,6 +18,8 @@ import queue
 import threading
 from typing import Callable, Optional
 
+from repro import telemetry
+
 _SENTINEL = object()
 
 
@@ -50,7 +52,9 @@ class AsyncSnapshotter:
                 if item is _SENTINEL:
                     return
                 if self._error is None:  # fail-fast: skip after first error
-                    item()
+                    with telemetry.span("snapshot_write", cat="statestore",
+                                        pending=self._q.qsize()):
+                        item()
             except BaseException as e:  # noqa: BLE001 — reported on flush
                 self._error = e
             finally:

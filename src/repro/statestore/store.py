@@ -25,6 +25,7 @@ import warnings
 from dataclasses import dataclass
 from typing import Any, List, Optional
 
+from repro import telemetry
 from repro.statestore.codec import (CodecError, Pytree, Snapshot,
                                     host_snapshot, snapshot_to_tree)
 from repro.statestore.policy import RetentionPolicy
@@ -85,10 +86,21 @@ class StateStore:
         if t.kind == "memory" or sync:
             t.put(snap, host=host)
             self.retention.apply(t, shard_id)
+            telemetry.emit("snapshot_save", step=step, shard_id=shard_id,
+                           tier=t.name, nbytes=snap.nbytes,
+                           synchronous=True)
         else:
-            def write(t=t, snap=snap, shard_id=shard_id):
-                t.put(snap, host=host)
-                self.retention.apply(t, shard_id)
+            def write(t=t, snap=snap, shard_id=shard_id, step=step):
+                # runs on the AsyncSnapshotter thread; the span lands on
+                # its own track in the Chrome trace
+                with telemetry.span("tier_write", cat="statestore",
+                                    tier=t.name, shard_id=shard_id,
+                                    nbytes=snap.nbytes):
+                    t.put(snap, host=host)
+                    self.retention.apply(t, shard_id)
+                telemetry.emit("snapshot_save", step=step,
+                               shard_id=shard_id, tier=t.name,
+                               nbytes=snap.nbytes, synchronous=False)
             self.writer.submit(write)
         return snap
 
@@ -128,6 +140,16 @@ class StateStore:
         a partial/corrupt newest checkpoint must not strand older intact
         ones.
         """
+        with telemetry.span("restore", cat="statestore",
+                            shard_id=shard_id):
+            res = self._restore(shard_id, template, max_step=max_step)
+        telemetry.emit("snapshot_restore", step=res.step,
+                       shard_id=shard_id, tier=res.tier, nbytes=res.nbytes,
+                       read_time_s=res.read_time_s)
+        return res
+
+    def _restore(self, shard_id: str, template: Optional[Pytree], *,
+                 max_step: Optional[int]) -> RestoreResult:
         self.flush()
         # candidate (step, tier) pairs: freshest step first; ties broken by
         # tier order (fastest first)

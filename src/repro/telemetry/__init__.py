@@ -1,0 +1,41 @@
+"""``repro.telemetry`` — structured events, metrics, and trace spans for
+training under churn.
+
+One process-wide :class:`Recorder` (disabled by default — every helper
+below is a cheap no-op until :func:`configure` installs one) collects:
+
+* **structured events** — schema-versioned JSONL records for step
+  windows, failures, recoveries, snapshot saves/restores, simulated node
+  churn, truncation (:mod:`repro.telemetry.events`);
+* **counters / gauges / histograms** — :func:`inc` / :func:`gauge` /
+  :func:`observe`;
+* **trace spans** — host-side timings around the hot-path boundaries
+  (window dispatch/drain, SPMD dispatch, snapshot writes, restores,
+  recovery execution), exported as Chrome ``trace_event`` JSON for
+  Perfetto (:mod:`repro.telemetry.trace`);
+* **derived run metrics** — goodput, per-strategy recovery breakdown,
+  per-tier snapshot bytes, straggler stretch, MFU
+  (:mod:`repro.telemetry.metrics`), rendered by
+  ``python -m repro.telemetry.report`` (:mod:`repro.telemetry.report`).
+
+See ``docs/observability.md`` for the event schema, span taxonomy, and
+the overhead contract (disabled telemetry must cost <2% fused-window
+throughput and stay sync-free).
+"""
+from repro.telemetry.events import (EVENT_KINDS, SCHEMA_VERSION,
+                                    validate_events, validate_record)
+from repro.telemetry.log import log, set_verbosity, verbosity
+from repro.telemetry.metrics import compute_metrics, render_text
+from repro.telemetry.recorder import (Recorder, clock, complete, configure,
+                                      emit, enabled, gauge, get_recorder,
+                                      inc, observe, set_recorder, span,
+                                      traced)
+from repro.telemetry.trace import chrome_trace, load_chrome_trace
+
+__all__ = [
+    "EVENT_KINDS", "SCHEMA_VERSION", "Recorder",
+    "chrome_trace", "clock", "complete", "compute_metrics", "configure",
+    "emit", "enabled", "gauge", "get_recorder", "inc", "load_chrome_trace",
+    "log", "observe", "render_text", "set_recorder", "set_verbosity",
+    "span", "traced", "validate_events", "validate_record", "verbosity",
+]

@@ -1,0 +1,52 @@
+"""Telemetry-backed logging behind a verbosity knob.
+
+The repo's progress output used to be bare ``print()`` calls scattered
+through the trainer and launch drivers — invisible to any tooling and
+impossible to silence selectively.  :func:`log` replaces them: one sink
+that (a) prints to stdout only when the message's level clears the
+process verbosity knob, and (b) mirrors every message into the structured
+event stream as a ``log`` event when a recorder is installed, so run
+directories keep the full narrative even for quiet runs.
+
+Levels: 0 = always (final results), 1 = progress (default), 2 = detail.
+The knob is ``set_verbosity()`` or the ``REPRO_VERBOSITY`` environment
+variable; ``--quiet`` drivers set it to 0.
+
+The ``no-bare-print`` lint rule (``repro.analysis``) keeps library code
+routed through here; CLIs whose stdout *is* the product suppress it with
+``# repro: allow[no-bare-print]`` instead.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.telemetry import recorder as _recorder
+
+
+def _env_verbosity() -> int:
+    try:
+        return int(os.environ.get("REPRO_VERBOSITY", "1"))
+    except ValueError:
+        return 1
+
+
+_VERBOSITY = _env_verbosity()
+
+
+def verbosity() -> int:
+    return _VERBOSITY
+
+
+def set_verbosity(level: int) -> int:
+    """Set the print threshold; returns the previous value."""
+    global _VERBOSITY
+    prev, _VERBOSITY = _VERBOSITY, int(level)
+    return prev
+
+
+def log(message: str, *, level: int = 1) -> None:
+    """Print ``message`` when ``level <= verbosity()`` and mirror it into
+    the event stream when telemetry is enabled."""
+    if level <= _VERBOSITY:
+        print(message)      # repro: allow[no-bare-print] — the one sink
+    _recorder.emit("log", message=message, level=level)

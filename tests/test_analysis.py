@@ -229,3 +229,43 @@ def test_fixture_dir_excluded_from_directory_walks():
     # but explicit file paths bypass the exclusion
     explicit = os.path.join(FIXTURES, "bad_host_sync.py")
     assert engine.iter_python_files([explicit]) == [explicit]
+
+
+# ---------------------------------------------------------------------------
+# no-bare-print: path-gated to src/repro library code
+# ---------------------------------------------------------------------------
+
+def _write_repro(tmp_path, body):
+    d = tmp_path / "src" / "repro"
+    d.mkdir(parents=True, exist_ok=True)
+    p = d / "mod.py"
+    p.write_text(body)
+    return str(p)
+
+
+def test_no_bare_print_fires_in_library_code(tmp_path):
+    path = _write_repro(tmp_path, "def f():\n    print('hi')\n")
+    found = findings_for(path, "no-bare-print")
+    assert lines_of(found) == [2]
+    assert "telemetry" in found[0].message
+
+
+def test_no_bare_print_ignores_code_outside_src_repro(tmp_path):
+    path = _write(tmp_path, "def f():\n    print('hi')\n")
+    assert findings_for(path, "no-bare-print") == []
+
+
+def test_no_bare_print_suppression(tmp_path):
+    path = _write_repro(
+        tmp_path,
+        "def f():\n    print('x')  # repro: allow[no-bare-print]\n")
+    assert findings_for(path, "no-bare-print") == []
+
+
+def test_no_bare_print_ignores_methods_and_log(tmp_path):
+    path = _write_repro(tmp_path, (
+        "from repro.telemetry import log\n"
+        "def f(obj):\n"
+        "    obj.print('not the builtin')\n"
+        "    log('routed through the sink')\n"))
+    assert findings_for(path, "no-bare-print") == []
