@@ -80,6 +80,37 @@ def run(steps: int = FAST_STEPS, verbose: bool = False):
     print(fmt_table(["strategy", "||w1 f_k+1 + w2 f_k-1 - f_k||^2",
                      "loss@reinit", f"loss@+{RECOVERY_STEPS}"], rows))
     results["base_loss"] = base_loss
+
+    # ---- elastic re-layout (docs/elastic.md): the departure path ---------
+    # A permanent departure reconstructs the lost stage in the OLD layout
+    # (the elastic strategy's grad_norm merge vs the copy_prev degrade),
+    # then re-cuts to K-1 balanced stages; the error term is re-measured
+    # under the shrunk variable partition whose stage inherits the lost
+    # layers — exercising the variable-layout slicing end to end.
+    shrunk = StagePartition(BENCH_MODEL, BENCH_STAGES - 1)
+    lost_lo, _ = part.stage_bounds(FAILED_STAGE)
+    heir = shrunk.stage_of_layer(lost_lo)
+    elastic = {}
+    for strat in ("grad_norm", "copy_prev"):
+        p2 = recover_stage(params, part, FAILED_STAGE, omegas,
+                           strategy=strat, key=jax.random.PRNGKey(7))
+        err_old = float(recovery_error(params, p2, part, FAILED_STAGE))
+        err_new = float(recovery_error(params, p2, shrunk, heir))
+        jump = float(loss_fn(p2, probe))
+        label = "elastic" if strat == "grad_norm" else "copy_prev"
+        elastic[label] = {"error_term": err_old,
+                          "error_term_shrunk": err_new,
+                          "loss_after_reinit": jump}
+    rows = [[s, f"{r['error_term']:.4e}", f"{r['error_term_shrunk']:.4e}",
+             f"{r['loss_after_reinit']:.4f}"]
+            for s, r in elastic.items()]
+    print(f"\n== elastic departure: reinit error before the K->K-1 re-cut "
+          f"(stage {FAILED_STAGE} -> shrunk stage {heir}/"
+          f"{BENCH_STAGES - 1}) ==")
+    print(fmt_table(["strategy", "error (K layout)", "error (K-1 layout)",
+                     "loss@reinit"], rows))
+    results["elastic_relayout"] = elastic
+
     save_json("sec44_recovery_error.json", results)
     return results
 

@@ -22,17 +22,18 @@ from typing import List, Optional
 from benchmarks.common import FAST_STEPS, fmt_table, run_strategy, save_json
 
 SCENARIOS = ["paper_10pct", "spot_diurnal", "flash_crowd", "wearout",
-             "trace:spot_demo.jsonl"]
+             "spot_shrink", "trace:spot_demo.jsonl"]
 STRATEGIES = ["checkfree", "checkfree_plus", "checkpoint", "tiered_ckpt",
-              "neighbor", "redundant", "adaptive"]
+              "neighbor", "redundant", "adaptive", "elastic"]
 
-# the CI smoke sweep: every process family (incl. a trace replay) x the
-# paper's policy + both statestore-backed baselines (their recovery
-# wall-clock is priced through the store's tier bandwidths), tiny step
+# the CI smoke sweep: every process family (incl. a trace replay and the
+# permanent-departure shrink scenario) x the paper's policy + both
+# statestore-backed baselines (their recovery wall-clock is priced through
+# the store's tier bandwidths) + the elastic repartitioner, tiny step
 # count, no cache
 SMOKE_SCENARIOS = ["bernoulli", "spot_diurnal", "flash_crowd",
-                   "trace:spot_demo.jsonl"]
-SMOKE_STRATEGIES = ["checkfree", "tiered_ckpt", "neighbor"]
+                   "spot_shrink", "trace:spot_demo.jsonl"]
+SMOKE_STRATEGIES = ["checkfree", "tiered_ckpt", "neighbor", "elastic"]
 
 
 def run(steps: int = FAST_STEPS, scenarios: Optional[List[str]] = None,

@@ -39,6 +39,28 @@ def _merge_trees(a: Params, b: Params, wa: jnp.ndarray, wb: jnp.ndarray,
                       cb * y.astype(jnp.float32)).astype(x.dtype), a, b)
 
 
+def _align_layers(stage: Params, n: int, side: str) -> Params:
+    """Fit a neighbour's stage slice to ``n`` layers for the merge.
+
+    Variable layouts (elastic re-layout, docs/elastic.md) can give the two
+    neighbours different layer counts than the failed stage.  The merge
+    pairs each lost layer with the neighbour layer *nearest* the shared
+    stage boundary — the last ``n`` layers of the previous stage, the first
+    ``n`` of the next — repeating the boundary layer when the neighbour is
+    smaller.  Uniform layouts pass through untouched (bit-identical).
+    """
+    def pick(x):
+        m = x.shape[0]
+        if m == n:
+            return x
+        if side == "prev":
+            idx = jnp.clip(jnp.arange(m - n, m), 0, m - 1)
+        else:
+            idx = jnp.clip(jnp.arange(n), 0, m - 1)
+        return x[idx]
+    return jax.tree.map(pick, stage)
+
+
 def recover_stage(params: Params, part: StagePartition, failed: int,
                   omegas: jnp.ndarray, *, strategy: str = "grad_norm",
                   key: Optional[jax.Array] = None,
@@ -70,16 +92,21 @@ def recover_stage(params: Params, part: StagePartition, failed: int,
                                    strategy in ("grad_norm", "uniform")):
         # CheckFree+ edge recovery: S1 <- S2 (swap-trained twin), SK <- SK-1
         twin = 1 if first else (k - 2 if last else failed - 1)
-        return part.set_stage(params, failed, part.get_stage(params, twin))
+        side = "next" if twin > failed else "prev"
+        return part.set_stage(params, failed, _align_layers(
+            part.get_stage(params, twin), part.layer_counts[failed], side))
 
     if strategy == "copy_prev":
         src = failed - 1 if failed > 0 else failed + 1
-        return part.set_stage(params, failed, part.get_stage(params, src))
+        side = "prev" if src < failed else "next"
+        return part.set_stage(params, failed, _align_layers(
+            part.get_stage(params, src), part.layer_counts[failed], side))
 
     # weighted / uniform average of the two neighbours (intermediate stages)
     assert 0 < failed < k - 1, "edge stages need CheckFree+ (twin_copy)"
-    prev_s = part.get_stage(params, failed - 1)
-    next_s = part.get_stage(params, failed + 1)
+    n = part.layer_counts[failed]
+    prev_s = _align_layers(part.get_stage(params, failed - 1), n, "prev")
+    next_s = _align_layers(part.get_stage(params, failed + 1), n, "next")
     if strategy == "uniform":
         wa = jnp.ones(())
         wb = jnp.ones(())
@@ -118,17 +145,22 @@ def recover_consecutive(params: Params, part: StagePartition,
         src = q if p < 0 else p
         assert 0 <= src < k_stages, "entire pipeline lost"
         stage = part.get_stage(params, src)
+        side = "next" if p < 0 else "prev"
         out = params
         for k in run:
-            out = part.set_stage(out, k, stage)
+            out = part.set_stage(
+                out, k, _align_layers(stage, part.layer_counts[k], side))
         return out
     prev_s = part.get_stage(params, p)
     next_s = part.get_stage(params, q)
     out = params
     for k in run:
+        n = part.layer_counts[k]
         a = omegas[p].astype(jnp.float32) * (q - k)
         b = omegas[q].astype(jnp.float32) * (k - p)
-        merged = _merge_trees(prev_s, next_s, a, b, use_kernel=use_kernel)
+        merged = _merge_trees(_align_layers(prev_s, n, "prev"),
+                              _align_layers(next_s, n, "next"),
+                              a, b, use_kernel=use_kernel)
         out = part.set_stage(out, k, merged)
     return out
 

@@ -12,7 +12,7 @@ each (the TPU adaptation of SkipPipe's reordered execution, see DESIGN.md).
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -28,12 +28,22 @@ def stage_permutations(num_stages: int) -> Tuple[List[int], List[int]]:
     return normal, swapped
 
 
-def swap_permutation(num_layers: int, num_stages: int) -> np.ndarray:
-    """Layer-index permutation realizing the swapped stage order."""
-    assert num_layers % num_stages == 0
-    lps = num_layers // num_stages
+def swap_permutation(num_layers: int, num_stages: int,
+                     bounds: Optional[Sequence[Tuple[int, int]]] = None
+                     ) -> np.ndarray:
+    """Layer-index permutation realizing the swapped stage order.
+
+    ``bounds`` gives each stage's (lo, hi) layer range for variable
+    (elastic) layouts; when omitted the layout is the seed equal split.
+    """
+    if bounds is None:
+        assert num_layers % num_stages == 0
+        lps = num_layers // num_stages
+        bounds = [(s * lps, (s + 1) * lps) for s in range(num_stages)]
+    assert len(bounds) == num_stages
     _, swapped = stage_permutations(num_stages)
     idx = []
     for s in swapped:
-        idx.extend(range(s * lps, (s + 1) * lps))
+        idx.extend(range(bounds[s][0], bounds[s][1]))
+    assert len(idx) == num_layers, (len(idx), num_layers)
     return np.asarray(idx, np.int32)

@@ -50,7 +50,7 @@ import numpy as np
 from repro import telemetry
 from repro.config import OptimizerConfig, TrainConfig
 from repro.core.failures import FailureSchedule
-from repro.core.stages import StagePartition
+from repro.core.stages import StagePartition, moved_layers, remap_stage_stats
 from repro.core.state import History, TrainState  # noqa: F401  (re-export)
 from repro.core.swap import swap_permutation
 from repro.core.walltime import WallClockModel
@@ -75,7 +75,9 @@ def _make_loss_fn(model: Model, part: StagePartition, use_swap: bool,
     """The (possibly swap-scheduled) loss closure shared by every step."""
     tower_key = part.tower_key
     if use_swap:
-        perm = jnp.asarray(swap_permutation(part.num_layers, part.num_stages))
+        perm = jnp.asarray(swap_permutation(
+            part.num_layers, part.num_stages,
+            bounds=[part.stage_bounds(i) for i in range(part.num_stages)]))
 
     def loss_fn(params, batch):
         if not use_swap:
@@ -281,6 +283,23 @@ class Trainer:
         # one compiled variant per bucket (repro.analysis.runtime)
         self.dispatched_buckets: set = set()
 
+        # ---- elastic repartitioning (docs/elastic.md) -------------------
+        # partition stage index -> cluster slot; identity until a permanent
+        # departure shrinks the layout (K slots keep their sim identity,
+        # the partition re-cuts over the survivors)
+        self._slots: List[int] = list(range(self.rcfg.num_stages))
+        self._allow_repartition = (
+            backend == "host"
+            and bool(getattr(self.strategy, "recover_by_repartition", False)))
+        if backend == "spmd" and \
+                getattr(self.strategy, "recover_by_repartition", False):
+            telemetry.log(
+                f"strategy {self.strategy.name!r} advertises repartition but "
+                "the spmd backend has a fixed mesh: permanent departures "
+                "degrade to in-place recovery on a spare")
+        # (wall_step, direction, from_k, to_k, moved_layers, cost_s)
+        self.repartition_log: List[Tuple[int, str, int, int, int, float]] = []
+
     # ---- window sizing -------------------------------------------------
     def _window_size(self, wall_step: int, effective_step: int,
                      max_wall: int) -> int:
@@ -297,14 +316,68 @@ class Trainer:
             ev = self.tcfg.eval_every
             cap = min(cap, ev - effective_step % ev)
         if self.schedule is not None:
+            regrown_at = (getattr(self.schedule, "regrown_at", None)
+                          if self._allow_repartition else None)
             for i in range(1, cap):
                 if self.schedule.at(wall_step + i):
+                    cap = i
+                    break
+                # a regrow re-cuts the layout (rebalance back toward K0):
+                # the fused window must end at that boundary too
+                if regrown_at is not None and regrown_at(wall_step + i):
                     cap = i
                     break
         for k in self._buckets:
             if k <= cap:
                 return k
         return 1
+
+    # ---- elastic re-layout (docs/elastic.md) ---------------------------
+    def _rebuild_fused_step(self) -> None:
+        """Recompile the fused step for the current partition.  Host backend
+        only: the stacked tower is one resident array, so a re-layout changes
+        stage *bounds* (and the compiled program cut along them), never the
+        weight values themselves."""
+        self.fused_step = make_fused_train_step(
+            self.model, self.tcfg.optimizer, self.part,
+            use_swap=self.strategy.uses_swap_schedule,
+            lr_decay=self.rcfg.lr_boost_decay)
+        # fresh executables per bucket: reset the retrace-sentinel ledger so
+        # the one-variant-per-bucket invariant holds per layout epoch
+        self.dispatched_buckets = set()
+
+    def _repartition(self, state: TrainState, new_slots: List[int], *,
+                     wall_step: int, direction: str,
+                     ) -> Tuple[TrainState, float]:
+        """Re-cut the stage layout over ``new_slots`` surviving cluster
+        slots: rebuild the partition (balanced layer counts), recompile the
+        fused step, let the strategy re-shard its per-stage state, remap the
+        omega statistics, and price the state movement through the wall-clock
+        model's link bandwidth."""
+        old_part, old_slots = self.part, self._slots
+        new_part = StagePartition(self.model.cfg, len(new_slots))
+        moved = moved_layers(old_part, old_slots, new_part, new_slots)
+        nbytes = moved * self.wall.layer_bytes(old_part.num_layers)
+        t0 = telemetry.clock()
+        self.part = new_part
+        self._slots = list(new_slots)
+        self._rebuild_fused_step()
+        state = self.strategy.on_layout_change(state, old_part, new_part)
+        state = TrainState(
+            state.params, state.opt_state, state.lr_scale,
+            remap_stage_stats(old_part, new_part, state.omegas),
+            state.effective_step)
+        cost = self.wall.relayout_time_s(nbytes)
+        telemetry.complete("repartition", t0, cat="trainer",
+                           direction=direction, to_stages=new_part.num_stages)
+        telemetry.emit(
+            "repartition", wall_step=wall_step, direction=direction,
+            from_stages=old_part.num_stages, to_stages=new_part.num_stages,
+            moved_layers=int(moved), nbytes=float(nbytes), cost_s=cost)
+        self.repartition_log.append(
+            (wall_step, direction, old_part.num_stages, new_part.num_stages,
+             int(moved), cost))
+        return state, cost
 
     # ---- main loop ----------------------------------------------------
     def run(self, batches, eval_batches: Optional[List] = None,
@@ -374,42 +447,94 @@ class Trainer:
         (beyond-paper, §6 future work) are recovered together when the
         strategy advertises the capability."""
         strategy = self.strategy
-        stages = sorted(self.schedule.at(wall_step))
-        runs: List[List[int]] = []
-        for stage in stages:
-            if runs and stage == runs[-1][-1] + 1:
-                runs[-1].append(stage)
+        slots = sorted(self.schedule.at(wall_step))
+        departed_at = (getattr(self.schedule, "departed_at", None)
+                       if self._allow_repartition else None)
+        departed = (set(departed_at(wall_step))
+                    if departed_at is not None else set())
+        # the schedule speaks in cluster-slot identities; recovery math in
+        # partition stage indices — identical until the first shrink
+        slot_to_stage = {s: i for i, s in enumerate(self._slots)}
+
+        def charge(slot: int) -> None:
+            nonlocal clock
+            hist.failures.append((wall_step, slot))
+            cost = strategy.failure_cost()
+            clock += cost
+            # store-backed strategies report the actual serialized
+            # bytes shipped to the replacement node; drained
+            # unconditionally (the per-event queue must stay in
+            # lockstep with failure_cost even when the schedule has no
+            # repricing hook)
+            nbytes = strategy.consume_restore_bytes()
+            overhead = 0.0
+            if failure_overhead is not None:
+                overhead = (failure_overhead(wall_step, slot)
+                            if nbytes is None else
+                            failure_overhead(wall_step, slot, nbytes))
+                clock += overhead
+            telemetry.emit("failure", wall_step=wall_step, stage=slot,
+                           cost_s=cost, overhead_s=overhead,
+                           nbytes=nbytes)
+
+        # 1) permanent departures first: reconstruct values in the old
+        #    layout, then shrink the partition to the survivors — but only
+        #    when the strategy accepts the priced re-layout and at least
+        #    two stages would remain
+        shrink_slots: List[int] = []
+        transient: List[Tuple[int, int]] = []   # (slot, stage)
+        for slot in slots:
+            stage = slot_to_stage.get(slot)
+            if stage is None:
+                continue   # slot already departed at an earlier boundary
+            accepted = False
+            if slot in departed and len(self._slots) - len(shrink_slots) > 2:
+                key, sub = jax.random.split(key)
+                event = FailureContext(stage=stage, wall_step=wall_step,
+                                       key=sub, hist=hist)
+                cand_slots = [s for s in self._slots
+                              if s != slot and s not in shrink_slots]
+                cand = StagePartition(self.model.cfg, len(cand_slots))
+                moved = moved_layers(self.part, self._slots, cand, cand_slots)
+                nbytes = moved * self.wall.layer_bytes(self.part.num_layers)
+                if strategy.accept_repartition(event, nbytes):
+                    state = strategy.handle_departure(state, event)
+                    shrink_slots.append(slot)
+                    charge(slot)
+                    accepted = True
+            if not accepted:
+                transient.append((slot, stage))
+
+        # 2) transient failures (and declined departures): consecutive-stage
+        #    runs (beyond-paper, §6 future work) recovered together when the
+        #    strategy advertises the capability; adjacency is a *partition*
+        #    property, so runs group by stage index
+        runs: List[List[Tuple[int, int]]] = []
+        for slot, stage in transient:
+            if runs and stage == runs[-1][-1][1] + 1:
+                runs[-1].append((slot, stage))
             else:
-                runs.append([stage])
+                runs.append([(slot, stage)])
         for run in runs:
             key, sub = jax.random.split(key)
-            event = FailureContext(stage=run[0], wall_step=wall_step,
+            event = FailureContext(stage=run[0][1], wall_step=wall_step,
                                    key=sub, hist=hist)
             if len(run) > 1 and strategy.handles_consecutive:
-                state = strategy.handle_consecutive(state, run, event)
+                state = strategy.handle_consecutive(
+                    state, [stage for _, stage in run], event)
             else:
-                for stage in run:
+                for _, stage in run:
                     state = strategy.handle_failure(
                         state, dataclasses.replace(event, stage=stage))
-            for stage in run:
-                hist.failures.append((wall_step, stage))
-                cost = strategy.failure_cost()
-                clock += cost
-                # store-backed strategies report the actual serialized
-                # bytes shipped to the replacement node; drained
-                # unconditionally (the per-event queue must stay in
-                # lockstep with failure_cost even when the schedule has no
-                # repricing hook)
-                nbytes = strategy.consume_restore_bytes()
-                overhead = 0.0
-                if failure_overhead is not None:
-                    overhead = (failure_overhead(wall_step, stage)
-                                if nbytes is None else
-                                failure_overhead(wall_step, stage, nbytes))
-                    clock += overhead
-                telemetry.emit("failure", wall_step=wall_step, stage=stage,
-                               cost_s=cost, overhead_s=overhead,
-                               nbytes=nbytes)
+            for slot, _ in run:
+                charge(slot)
+
+        # 3) one shrink covers every accepted departure at this boundary
+        if shrink_slots:
+            survivors = [s for s in self._slots if s not in shrink_slots]
+            state, cost = self._repartition(
+                state, survivors, wall_step=wall_step, direction="shrink")
+            clock += cost
         return state, clock, key
 
     def _loop(self, verbose, state, hist, clock, wall_step, max_wall, key):
@@ -423,6 +548,14 @@ class Trainer:
         iter_factor = getattr(self.schedule, "iteration_factor", None)
         failure_overhead = getattr(self.schedule, "failure_overhead", None)
         observed_rate = getattr(self.schedule, "observed_rate", None)
+        # elastic hooks (simulated clusters only): regrow events rebalance a
+        # shrunk layout back toward K0, and iteration pacing follows only the
+        # slots the layout actually runs on
+        regrown_at = (getattr(self.schedule, "regrown_at", None)
+                      if self._allow_repartition else None)
+        iter_factor_active = (
+            getattr(self.schedule, "iteration_factor_active", None)
+            if self._allow_repartition else None)
 
         replay = strategy.replay_horizon()
 
@@ -431,6 +564,18 @@ class Trainer:
             #    rate) reaches the strategy before this iteration's events
             if observed_rate is not None:
                 strategy.observe_environment(observed_rate(wall_step))
+
+            # 0b) fresh capacity at this boundary: grow the layout back
+            #     (the resident tower never moved — only the cut changes)
+            if regrown_at is not None and \
+                    len(self._slots) < self.rcfg.num_stages:
+                back = [s for s in regrown_at(wall_step)
+                        if s not in self._slots]
+                if back:
+                    state, cost = self._repartition(
+                        state, sorted(self._slots + back),
+                        wall_step=wall_step, direction="grow")
+                    clock += cost
 
             # 1) failures at this boundary
             if self.schedule is not None:
@@ -481,8 +626,15 @@ class Trainer:
                 if i > 0 and observed_rate is not None:
                     strategy.observe_environment(
                         observed_rate(wall_step + i))
-                factor = (iter_factor(wall_step + i)
-                          if iter_factor is not None else 1.0)
+                if iter_factor_active is not None and \
+                        len(self._slots) < self.rcfg.num_stages:
+                    # shrunk layout: pace by the surviving slots only —
+                    # departed slots no longer stall the pipeline
+                    factor = iter_factor_active(wall_step + i, self._slots)
+                elif iter_factor is not None:
+                    factor = iter_factor(wall_step + i)
+                else:
+                    factor = 1.0
                 clock += strategy.iteration_cost() * factor
                 stretch += factor
                 hist.steps.append(state.effective_step - k + i + 1)

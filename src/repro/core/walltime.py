@@ -69,6 +69,9 @@ class WallClockModel:
     disk_capacity_bytes: float = 1e12
     remote_latency_s: float = 0.2        # object-store round trip
     remote_capacity_bytes: float = float("inf")
+    # --- elastic re-layout (peer-to-peer state movement over the fabric) ----
+    link_bandwidth_Bps: float = 12.8e9   # inter-host link, same as hot tier
+    relayout_latency_s: float = 2.0      # barrier + re-plan before moving
 
     def tier_specs(self) -> Dict[str, TierSpec]:
         """The default three-tier hierarchy, fastest first.  The remote tier
@@ -94,6 +97,21 @@ class WallClockModel:
         the cluster simulator prices recovery transfers with this against
         each replacement node's bandwidth."""
         return self.model_bytes / max(num_stages, 1)
+
+    def layer_bytes(self, num_layers: int) -> float:
+        """Serialized bytes of one transformer block (tower split evenly);
+        the elastic re-layout moves whole blocks between surviving hosts."""
+        return self.model_bytes / max(num_layers, 1)
+
+    def relayout_time_s(self, nbytes: float) -> float:
+        """One-time cost of an elastic re-layout that moves ``nbytes`` of
+        stage state between surviving hosts: a fixed re-plan barrier plus
+        bytes over the inter-host link.  Charged once per layout change
+        (shrink or grow), never on the steady-state path."""
+        if self.link_bandwidth_Bps <= 0 or \
+                self.link_bandwidth_Bps == float("inf"):
+            return self.relayout_latency_s
+        return self.relayout_latency_s + nbytes / self.link_bandwidth_Bps
 
     # ---- legacy string-dispatch shim (delegates to the registry) --------
     def _strategy(self, name: str, ckpt_every: int = 100):

@@ -43,6 +43,13 @@ def main() -> None:
                     help="simulated-cluster environment (repro.sim): a "
                          "registered scenario name or trace:<file>; "
                          "supersedes --rate's Bernoulli schedule")
+    ap.add_argument("--depart-prob", type=float, default=None,
+                    help="override the scenario's per-failure probability "
+                         "that the node is permanently gone (elastic "
+                         "repartitioning; see docs/elastic.md)")
+    ap.add_argument("--regrow-h", type=float, default=None,
+                    help="override the scenario's hours until fresh "
+                         "capacity replaces a departed node (inf = never)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=0,
                     help="0 -> the config's max_seq_len (capped at 512)")
@@ -59,6 +66,11 @@ def main() -> None:
                          "docs/pipeline.md)")
     ap.add_argument("--reduced", action="store_true",
                     help="CPU-sized variant of the same family")
+    ap.add_argument("--layers", type=int, default=0,
+                    help="override the config's transformer layer count "
+                         "(0 = keep); with --reduced this lifts the 2-layer "
+                         "floor so a >2-stage pipeline can exercise elastic "
+                         "shrink on CPU (docs/elastic.md)")
     ap.add_argument("--out", default="", help="write History JSON here")
     ap.add_argument("--telemetry-dir", default="",
                     help="record the structured telemetry event stream "
@@ -77,13 +89,24 @@ def main() -> None:
         rec = telemetry.configure(run_dir=args.telemetry_dir)
     elif args.trace:
         ap.error("--trace needs --telemetry-dir")
+    if (args.depart_prob is not None or args.regrow_h is not None) \
+            and not args.scenario:
+        ap.error("--depart-prob/--regrow-h need --scenario (repro.sim)")
 
     cfg = get_config(args.arch)
     stages = args.stages or get_stages(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
         stages = min(stages, 2)
-    if cfg.num_layers % max(stages, 1) != 0:
+    if args.layers > 0:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, num_layers=args.layers)
+        stages = args.stages or stages
+    stages = min(max(stages, 1), cfg.num_layers)
+    if args.backend == "spmd" and cfg.num_layers % stages != 0:
+        # the SPMD mesh shards the stacked tower uniformly over devices;
+        # the host backend takes any layout (variable per-stage layer
+        # counts — docs/elastic.md), so only spmd snaps to a divisor
         stages = max(d for d in range(1, cfg.num_layers + 1)
                      if cfg.num_layers % d == 0 and d <= stages)
     if args.backend == "spmd":
@@ -113,9 +136,24 @@ def main() -> None:
         f"backend={args.backend} stages={stages} steps={args.steps} "
         f"rate={args.rate:.0%}/h seq={seq} batch={args.batch}")
 
+    wall = WallClockModel(model_bytes=4 * n * 2)
     schedule = None
     if args.scenario:
-        pass  # the Trainer builds it from rcfg.scenario (repro.sim)
+        # the Trainer builds the schedule from rcfg.scenario unless the
+        # shrink knobs override the scenario's churn shape, in which case
+        # the driver simulates with the overridden config itself
+        overrides = {}
+        if args.depart_prob is not None:
+            overrides["depart_prob"] = args.depart_prob
+        if args.regrow_h is not None:
+            overrides["regrow_h"] = args.regrow_h
+        if overrides:
+            from repro.sim import simulate
+            from repro.sim.scenario import get_scenario
+            schedule = simulate(
+                get_scenario(args.scenario, **overrides),
+                steps=args.steps * 10, seed=args.seed, num_stages=stages,
+                protect_edges=rcfg.protect_edge_stages, wall=wall)
     elif args.rate > 0 and args.strategy != "none":
         schedule = FailureSchedule(
             rate_per_hour=args.rate, iteration_time_s=rcfg.iteration_time_s,
@@ -130,8 +168,8 @@ def main() -> None:
     evals = [batch_for(cfg, src.sample(rng, args.batch, seq), rng)
              for _ in range(2)]
 
-    trainer = Trainer(model, tcfg, wall=WallClockModel(
-        model_bytes=4 * n * 2), schedule=schedule, backend=args.backend)
+    trainer = Trainer(model, tcfg, wall=wall, schedule=schedule,
+                      backend=args.backend)
     if args.scenario and trainer.schedule is not None:
         log(trainer.schedule.summary())
     state, hist = trainer.run(batches, evals, verbose=not args.quiet)

@@ -51,6 +51,8 @@ class Adaptive(RecoveryStrategy):
         self._env_rate = None      # cluster telemetry (observe_environment)
         # (effective_step, from, to) switch log — inspectable by benchmarks
         self.switches: List[Tuple[int, str, str]] = []
+        # (wall_step, accepted, relayout_s, stay_degraded_s) per departure
+        self.repartition_decisions: List[Tuple[int, bool, float, float]] = []
 
     # ---- capability flags follow the children -------------------------
     # On instances these delegate dynamically; on the class itself they
@@ -71,6 +73,10 @@ class Adaptive(RecoveryStrategy):
     uses_swap_schedule = _ChildFlag(
         lambda self: (self.low.uses_swap_schedule or
                       self.high.uses_swap_schedule), False)
+    # the adaptive policy itself decides per departure whether to shrink
+    # (accept_repartition prices re-layout vs. staying degraded), so it
+    # always advertises the capability to the trainer
+    recover_by_repartition = _ChildFlag(lambda self: True, False)
 
     # ---- wiring -------------------------------------------------------
     def bind(self, part, init_fn=None) -> "Adaptive":
@@ -103,6 +109,49 @@ class Adaptive(RecoveryStrategy):
                        event: FailureContext) -> TrainState:
         self._pending += len(run)
         return self.active.on_consecutive(state, run, event)
+
+    # ---- elastic repartitioning ---------------------------------------
+    #: pipeline slowdown while a departed slot limps on a spare (mirrors
+    #: the simulator's default ``spare_penalty``)
+    DEGRADED_PENALTY = 1.5
+
+    def on_departure(self, state: TrainState,
+                     event: FailureContext) -> TrainState:
+        self._pending += 1
+        return self.active.on_departure(state, event)
+
+    def accept_repartition(self, event: FailureContext,
+                           moved_bytes: float) -> bool:
+        """Chameleon-style priced selection (docs/elastic.md): shrink only
+        when the one-time re-layout beats staying degraded.
+
+        * re-layout: ``relayout_time_s(moved_bytes)`` once;
+        * stay at K: an in-place restore (hot-tier read of one stage shard,
+          TierSpec-priced) plus the spare's excess iteration time over the
+          expected degraded horizon.  Observed churn shortens that horizon
+          — a stormy cluster returns capacity soon, so limping is cheap;
+          a calm one makes the degradation effectively permanent.
+        """
+        relayout_s = self.wall.relayout_time_s(moved_bytes)
+        specs = self.wall.tier_specs()
+        restore_s = specs["mem"].read_time_s(
+            self.wall.stage_bytes(self.part.num_stages))
+        window = max(self.rcfg.adaptive_window, 1)
+        expected_fails = self.failure_rate() * window
+        horizon_iters = window / max(expected_fails, 1.0)
+        degraded_s = ((self.DEGRADED_PENALTY - 1.0)
+                      * self.wall.iter_time_s * horizon_iters)
+        accept = relayout_s <= restore_s + degraded_s
+        self.repartition_decisions.append(
+            (event.wall_step, accept, relayout_s, restore_s + degraded_s))
+        return accept
+
+    def on_layout_change(self, state: TrainState, old, new) -> TrainState:
+        self.part = new
+        state = self.low.on_layout_change(state, old, new)
+        if self.high is not self.low:
+            state = self.high.on_layout_change(state, old, new)
+        return state
 
     def after_step(self, state: TrainState, hist: History) -> None:
         self._window.append(self._pending)

@@ -19,6 +19,12 @@ lifecycle hooks (called by the trainer)
   ``observe_environment(rate)``     — cluster telemetry: the simulator's
                                       observed failure rate, fed once per
                                       wall iteration when available
+  ``on_departure(state, event)``    — a stage's node is permanently gone
+                                      (reconstruct values; the trainer then
+                                      repartitions if the strategy's
+                                      ``recover_by_repartition`` says so)
+  ``on_layout_change(state, old, new)`` — the trainer re-cut the stage
+                                      layout; rebind per-stage state
 
 wall-clock model (absorbing ``WallClockModel``'s per-strategy dispatch)
   ``iteration_cost()``  — modelled seconds per wall iteration
@@ -87,6 +93,11 @@ class RecoveryStrategy:
     recover_in_mesh: ClassVar[bool] = False   # repairs stages with in-mesh
                                               # collectives when a backend
                                               # offers them (SPMD pipeline)
+    recover_by_repartition: ClassVar[bool] = False  # on a *permanent* node
+                                              # departure the trainer may
+                                              # shrink the layout to the
+                                              # survivors (host backend;
+                                              # see docs/elastic.md)
 
     def __init__(self, rcfg: "RecoveryConfig", wall: "WallClockModel"):
         self.rcfg = rcfg
@@ -149,9 +160,50 @@ class RecoveryStrategy:
                        duration_s=duration, stages=list(run))
         return state
 
+    def handle_departure(self, state: "TrainState",
+                         event: FailureContext) -> "TrainState":
+        """:meth:`on_departure` with the same span + event treatment as
+        :meth:`handle_failure`.  Called instead of it when the failure is a
+        permanent departure the trainer will repartition away — the
+        strategy's job here is only to reconstruct the lost stage's values
+        in the *old* layout; the trainer re-cuts the layout afterwards."""
+        t0 = telemetry.clock()
+        state = self.on_departure(state, event)
+        duration = telemetry.clock() - t0
+        telemetry.complete("recovery", t0, cat="recovery",
+                           strategy=self.name, stage=event.stage)
+        telemetry.emit("recovery", wall_step=event.wall_step,
+                       stage=event.stage, strategy=self.name,
+                       duration_s=duration, stages=[event.stage])
+        return state
+
     # ---- lifecycle ---------------------------------------------------
     def on_failure(self, state: "TrainState",
                    event: FailureContext) -> "TrainState":
+        return state
+
+    def on_departure(self, state: "TrainState",
+                     event: FailureContext) -> "TrainState":
+        """A permanent departure reconstructs exactly like a failure; the
+        re-layout that follows is the trainer's job (it owns the fused
+        step and the partition), not the strategy's."""
+        return self.on_failure(state, event)
+
+    def accept_repartition(self, event: FailureContext,
+                           moved_bytes: float) -> bool:
+        """Whether to shrink the layout for this departure (``moved_bytes``
+        is the planned state movement the re-layout would pay for).  Only
+        consulted when ``recover_by_repartition`` is set; the ``adaptive``
+        strategy prices this against staying degraded (docs/elastic.md)."""
+        return True
+
+    def on_layout_change(self, state: "TrainState", old: "StagePartition",
+                         new: "StagePartition") -> "TrainState":
+        """The trainer re-cut the stage layout (shrink after a departure or
+        grow on regrow).  Rebind the partition and refresh any per-stage
+        derived state; store-backed strategies re-shard their snapshots
+        here so post-shrink restores stay correct."""
+        self.part = new
         return state
 
     def on_consecutive(self, state: "TrainState", run: List[int],

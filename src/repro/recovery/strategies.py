@@ -5,6 +5,10 @@ Seven config-selectable built-ins:
   checkfree       — Alg. 1 gradient-norm-weighted neighbour merge; edge
                     stages degrade to copy (the paper protects them)
   checkfree_plus  — + swap schedule, so edge stages have trained twins
+  elastic         — checkfree reconstruction plus live re-layout: a
+                    permanent departure shrinks the pipeline to the
+                    survivors instead of limping on a spare
+                    (docs/elastic.md)
   checkpoint      — periodic save / rollback baseline (restarts from a fresh
                     init when a failure precedes the first save)
   redundant       — Bamboo-style redundant computation: exact weights, paid
@@ -215,6 +219,25 @@ class CheckFreePlus(MergeRecovery):
     handles_edge_stages = True
     handles_consecutive = True
     uses_swap_schedule = True
+
+
+@register_strategy("elastic")
+class Elastic(MergeRecovery):
+    """CheckFree reconstruction + elastic repartitioning (docs/elastic.md).
+
+    Transient failures behave exactly like ``checkfree``.  When the
+    simulator reports a *permanent* departure, the lost stage is first
+    reconstructed by the gradient-norm-weighted neighbour merge (the
+    ``stage_merge`` kernel path) in the old layout, then the trainer
+    re-cuts the surviving K-1 stages into balanced contiguous ranges and
+    rebuilds the fused step; on a later regrow it rebalances back to K.
+    The re-layout itself is priced once through
+    :meth:`repro.core.walltime.WallClockModel.relayout_time_s`.
+    """
+
+    handles_edge_stages = False
+    handles_consecutive = True
+    recover_by_repartition = True
 
 
 @register_strategy("uniform")

@@ -50,6 +50,12 @@ class SimFailureSchedule:
         self._by_step = {}
         for e in self.events:
             self._by_step.setdefault(e.step, []).append(e.stage)
+        self._departed_by_step = {}
+        for step, stage in result.departures:
+            self._departed_by_step.setdefault(step, []).append(stage)
+        self._regrown_by_step = {}
+        for step, stage in result.regrows:
+            self._regrown_by_step.setdefault(step, []).append(stage)
         self.rate_window = max(rate_window, 1)
         counts = np.zeros(result.steps + 1, np.float64)
         for e in self.events:
@@ -69,12 +75,37 @@ class SimFailureSchedule:
                 f"({r.total_hours:.1f} simulated h, "
                 f"scenario={r.scenario.name!r}, seed={r.seed})")
 
+    # ---- elastic repartitioning hooks --------------------------------
+    def departed_at(self, step: int) -> List[int]:
+        """Stages whose node permanently departed at ``step`` (these also
+        appear in ``at(step)`` — a departure is a failure plus a vacancy)."""
+        return self._departed_by_step.get(step, [])
+
+    def regrown_at(self, step: int) -> List[int]:
+        """Departed slots that received fresh capacity at ``step``."""
+        return self._regrown_by_step.get(step, [])
+
     # ---- per-event wall-clock source ---------------------------------
     def iteration_factor(self, step: int) -> float:
         """Iteration-time multiplier at ``step`` (slowest active host)."""
         if 0 <= step < len(self.result.iter_factors):
             return float(self.result.iter_factors[step])
         return 1.0
+
+    def iteration_factor_active(self, step: int,
+                                slots: List[int]) -> float:
+        """Iteration-time multiplier over only ``slots`` — the pace an
+        elastic trainer pays after shrinking away departed slots.  A slot
+        that is departed but still in ``slots`` (a strategy that declined
+        to repartition) is priced at the degraded spare penalty, exactly
+        like :meth:`iteration_factor` would."""
+        arr = self.result.stage_slowdowns
+        if arr is None or not (0 <= step < len(arr)) or not slots:
+            return self.iteration_factor(step)
+        penalty = self.result.scenario.spare_penalty
+        vals = [penalty if np.isnan(arr[step, s]) else float(arr[step, s])
+                for s in slots]
+        return float(max(vals))
 
     def failure_overhead(self, step: int, stage: int,
                          nbytes: Optional[float] = None) -> float:

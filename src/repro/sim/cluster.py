@@ -55,7 +55,8 @@ class SimResult:
     overheads: Dict[Tuple[int, int], float]
     iter_factors: np.ndarray        # [steps] iteration-time multiplier
     times_h: np.ndarray             # [steps] sim time at each step start
-    # (kind, step, stage, node_id) with kind in {"fail", "respawn", "rejoin"}
+    # (kind, step, stage, node_id) with kind in
+    # {"fail", "respawn", "rejoin", "depart", "regrow"}
     node_log: List[Tuple[str, int, int, int]] = field(default_factory=list)
     # per-event (restart latency s, replacement bandwidth B/s): the raw
     # pricing inputs behind ``overheads``, kept so the adapter can reprice
@@ -63,6 +64,15 @@ class SimResult:
     # (statestore shards) instead of the default one-stage estimate
     event_costs: Dict[Tuple[int, int], Tuple[float, float]] = \
         field(default_factory=dict)
+    # permanent departures and the fresh capacity that later replaced them,
+    # as (step, stage); every departure also appears in ``events``
+    departures: List[Tuple[int, int]] = field(default_factory=list)
+    regrows: List[Tuple[int, int]] = field(default_factory=list)
+    # [steps, num_stages] effective slowdown per slot (NaN while the slot
+    # is departed) — lets an elastic trainer pace iterations over only the
+    # slots it actually runs on, while ``iter_factors`` keeps charging the
+    # degraded spare penalty for consumers that stay at K stages
+    stage_slowdowns: Optional[np.ndarray] = None
 
     @property
     def total_hours(self) -> float:
@@ -92,6 +102,10 @@ class Cluster:
             s: self._fresh_node(0.0) for s in range(scenario.num_stages)}
         # rejoin policy: stage -> (original node, sim time it comes back)
         self._restarting: Dict[int, Tuple[Node, float]] = {}
+        # permanent departures: stage -> sim time fresh capacity arrives
+        # (inf = never); a departed slot cannot fail again and runs NaN in
+        # ``stage_slowdowns`` until it regrows
+        self._departed: Dict[int, float] = {}
 
     def _fresh_node(self, t_h: float) -> Node:
         sc = self.sc
@@ -106,8 +120,9 @@ class Cluster:
 
     def _effective_slowdown(self, stage: int) -> float:
         # a stage whose host is restarting runs on a shared spare that
-        # stalls the pipeline at spare_penalty x nominal speed
-        if stage in self._restarting:
+        # stalls the pipeline at spare_penalty x nominal speed; a departed
+        # slot is priced the same way in the degraded (stay-at-K) view
+        if stage in self._restarting or stage in self._departed:
             return self.sc.spare_penalty
         return self.nodes[stage].slowdown
 
@@ -124,12 +139,16 @@ class Cluster:
         event_costs: Dict[Tuple[int, int], Tuple[float, float]] = {}
         factors = np.ones(self.steps, np.float64)
         times = np.zeros(self.steps, np.float64)
+        slowdowns = np.ones((self.steps, sc.num_stages), np.float64)
+        departures: List[Tuple[int, int]] = []
+        regrows: List[Tuple[int, int]] = []
         log = []
 
         t_span = telemetry.clock()
         t_h = 0.0
         for step in range(self.steps):
-            # 1) finished restarts rejoin their stage
+            # 1) finished restarts rejoin their stage; departed slots whose
+            #    replacement capacity arrived regrow with a fresh node
             for stage, (node, ready_h) in list(self._restarting.items()):
                 if t_h >= ready_h:
                     node.joined_h = t_h
@@ -138,6 +157,15 @@ class Cluster:
                     log.append(("rejoin", step, stage, node.node_id))
                     telemetry.emit("sim_node", what="rejoin", step=step,
                                    stage=stage, node_id=node.node_id)
+            for stage, ready_h in list(self._departed.items()):
+                if t_h >= ready_h:
+                    node = self._fresh_node(t_h)
+                    self.nodes[stage] = node
+                    del self._departed[stage]
+                    regrows.append((step, stage))
+                    log.append(("regrow", step, stage, node.node_id))
+                    telemetry.emit("sim_node", what="regrow", step=step,
+                                   stage=stage, node_id=node.node_id)
 
             # 2) this iteration runs at the slowest participant's pace
             factor = max(self._effective_slowdown(s)
@@ -145,12 +173,19 @@ class Cluster:
             dt_h = sc.iteration_time_s * factor / 3600.0
             factors[step] = factor
             times[step] = t_h
+            for s in range(sc.num_stages):
+                slowdowns[step, s] = (np.nan if s in self._departed
+                                      else self._effective_slowdown(s))
 
             # 3) candidate failures over the elapsed window; adjacency
-            #    constraint applied in ascending stage order (paper §3)
+            #    constraint applied in ascending stage order (paper §3);
+            #    a departed slot has no node left to fail
             accepted: List[int] = []
             for stage in self.process.failed_stages(
                     step, t_h, dt_h, candidates, node_at):
+                if stage in self._departed:
+                    suppressed.append(FailureEvent(step, stage))
+                    continue
                 if any(abs(stage - a) <= 1 for a in accepted):
                     suppressed.append(FailureEvent(step, stage))
                     continue
@@ -160,6 +195,29 @@ class Cluster:
             for stage in accepted:
                 dead = self.nodes[stage]
                 events.append(FailureEvent(step, stage))
+                # the departure coin rides the infra stream, drawn only when
+                # the scenario can depart — existing schedules stay
+                # bit-identical (both RNG streams consume exactly what they
+                # used to when depart_prob == 0 and rejoin != "never")
+                departs = sc.rejoin == "never" or (
+                    sc.depart_prob > 0.0
+                    and self._infra_rng.random() < sc.depart_prob)
+                if departs:
+                    departures.append((step, stage))
+                    log.append(("depart", step, stage, dead.node_id))
+                    self._restarting.pop(stage, None)
+                    ready = (t_h + sc.regrow_h
+                             if sc.regrow_h != float("inf") else float("inf"))
+                    self._departed[stage] = ready
+                    # no replacement to ship state to: the in-place view
+                    # pays through the spare penalty in ``iter_factors``,
+                    # the elastic view through the re-layout pricing
+                    overheads[(step, stage)] = 0.0
+                    event_costs[(step, stage)] = (0.0, sc.bandwidth_Bps)
+                    telemetry.emit("sim_node", what="depart", step=step,
+                                   stage=stage, node_id=dead.node_id,
+                                   overhead_s=0.0)
+                    continue
                 log.append(("fail", step, stage, dead.node_id))
                 if sc.rejoin == "rejoin":
                     # the node itself comes back after its restart latency;
@@ -200,4 +258,5 @@ class Cluster:
                          events=events, suppressed=suppressed,
                          overheads=overheads,
                          iter_factors=factors, times_h=times, node_log=log,
-                         event_costs=event_costs)
+                         event_costs=event_costs, departures=departures,
+                         regrows=regrows, stage_slowdowns=slowdowns)

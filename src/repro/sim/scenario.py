@@ -21,6 +21,10 @@ Built-ins:
                         heterogeneous nodes, rejoin-after-restart dynamics
 ``flash_crowd``         calm Poisson background with a correlated
                         preemption storm (mass spot reclaim)
+``spot_shrink``         spot reclaims are *permanent* (``rejoin="never"``):
+                        a departed slot only returns when fresh capacity
+                        arrives after ``regrow_h`` — the elastic
+                        repartitioning scenario (docs/elastic.md)
 ``wearout``             Weibull wear-out hazard: freshly (re)started nodes
                         are reliable, old ones increasingly fail
 ``trace:<file>``        replay a recorded preemption trace (JSONL; see
@@ -35,7 +39,7 @@ import os
 from dataclasses import dataclass
 from typing import Dict, List
 
-REJOIN_POLICIES = ("respawn", "rejoin")
+REJOIN_POLICIES = ("respawn", "rejoin", "never")
 
 TRACES_DIR = os.path.join(os.path.dirname(__file__), "traces")
 
@@ -57,8 +61,15 @@ class ScenarioConfig:
     restart_latency_s: float = 0.0      # node redeploy time after a failure
     bandwidth_Bps: float = float("inf")  # state-transfer bandwidth per node
     rejoin: str = "respawn"             # respawn (fresh node) | rejoin (same
-                                        # node returns; a spare fills in)
+                                        # node returns; a spare fills in) |
+                                        # never (failures are departures)
     spare_penalty: float = 1.5          # spare-host slowdown while rejoining
+    # --- permanent departures (the elastic-repartitioning outcome) --------
+    depart_prob: float = 0.0            # chance a failure is permanent under
+                                        # respawn/rejoin ("never" makes it 1)
+    regrow_h: float = float("inf")      # hours until replacement capacity
+                                        # arrives for a departed slot (inf =
+                                        # the slot never comes back)
     # --- process parameters ----------------------------------------------
     weibull_shape: float = 1.5          # >1 = wear-out, <1 = infant mortality
     diurnal_peak_h: float = 14.0        # time-of-day of peak preemption
@@ -77,6 +88,8 @@ class ScenarioConfig:
         assert self.rejoin in REJOIN_POLICIES, self.rejoin
         assert self.num_stages >= 2, "need at least two pipeline stages"
         assert self.iteration_time_s > 0
+        assert 0.0 <= self.depart_prob <= 1.0, self.depart_prob
+        assert self.regrow_h > 0, self.regrow_h
         if self.process == "trace":
             assert self.trace_path, "trace scenarios need a trace_path"
 
@@ -161,6 +174,16 @@ register_scenario(ScenarioConfig(
     rate_per_hour=0.02, burst_start_h=8.0, burst_len_h=2.0,
     burst_rate_per_hour=1.5,
     restart_latency_s=90.0, bandwidth_Bps=62.5e6))
+
+register_scenario(ScenarioConfig(
+    name="spot_shrink", process="bernoulli",
+    rate_per_hour=0.08,
+    restart_latency_s=120.0, bandwidth_Bps=62.5e6,
+    # every preemption is permanent: the spot node is reclaimed for good,
+    # and replacement capacity only arrives after ``regrow_h`` hours —
+    # the scenario elastic repartitioning (shrink K -> K-1, grow back on
+    # regrow) exists for
+    rejoin="never", regrow_h=1.5, spare_penalty=1.6))
 
 register_scenario(ScenarioConfig(
     name="wearout", process="weibull",

@@ -24,7 +24,8 @@ from repro.statestore.snapshot import (AsyncSnapshotter,  # noqa: F401
 from repro.statestore.store import (RestoreResult, StateStore,  # noqa: F401
                                     StoreError)
 from repro.statestore.tiers import (DiskTier, MemoryTier,  # noqa: F401
-                                    RemoteTier, StorageTier, TierError)
+                                    RemoteTier, RetryPolicy, StorageTier,
+                                    TierError)
 
 # import for registration side effects: tiered_ckpt / neighbor strategies
 from repro.statestore import strategies as _strategies  # noqa: F401,E402

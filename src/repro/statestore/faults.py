@@ -1,0 +1,81 @@
+"""Fault-injecting storage tiers for chaos tests.
+
+Transient I/O failures are injected *under* the retry seams
+(:meth:`DiskTier._write_blob` / :meth:`DiskTier._read_blob`), so the
+tier's own :class:`~repro.statestore.tiers.RetryPolicy` is what absorbs
+them — exactly the code path a flaky NFS mount or throttled object store
+exercises in production.  A plan is a per-operation countdown: the next
+``times`` calls raise, then the tier heals.
+
+    tier = FaultInjectingDiskTier(spec, directory)
+    tier._sleep = lambda s: None          # tests skip real backoff waits
+    tier.inject("put", times=2)           # next two writes fail, then heal
+    tier.inject("get", times=1, exc=PermissionError("throttled"))
+
+Only used by tests; nothing in the production paths imports this module.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+from repro.statestore.tiers import DiskTier, RemoteTier
+
+
+class _FaultPlanMixin:
+    """Countdown-based fault injection shared by the flaky tier classes."""
+
+    def _plan(self) -> Dict[str, list]:
+        if not hasattr(self, "_fault_plan"):
+            self._fault_plan: Dict[str, list] = {}
+        return self._fault_plan
+
+    def inject(self, op: str, times: int = 1,
+               exc: Optional[BaseException] = None,
+               exc_factory: Optional[Callable[[], BaseException]] = None
+               ) -> None:
+        """Arm the next ``times`` calls of ``op`` ("put" | "get") to raise.
+
+        ``exc`` is raised every time (default a transient ``OSError``);
+        ``exc_factory`` builds a fresh exception per failure when identity
+        matters.
+        """
+        assert op in ("put", "get"), op
+        if exc_factory is None:
+            def exc_factory():
+                return exc if exc is not None else OSError(
+                    f"injected transient {op} fault")
+        self._plan()[op] = [times, exc_factory]
+
+    def faults_remaining(self, op: str) -> int:
+        entry = self._plan().get(op)
+        return entry[0] if entry else 0
+
+    def _maybe_fault(self, op: str) -> None:
+        entry = self._plan().get(op)
+        if entry and entry[0] > 0:
+            entry[0] -= 1
+            raise entry[1]()
+
+
+class FaultInjectingDiskTier(_FaultPlanMixin, DiskTier):
+    """A :class:`DiskTier` whose raw blob I/O fails on command."""
+
+    def _write_blob(self, path: str, blob: bytes) -> None:
+        self._maybe_fault("put")
+        super()._write_blob(path, blob)
+
+    def _read_blob(self, path: str) -> bytes:
+        self._maybe_fault("get")
+        return super()._read_blob(path)
+
+
+class FaultInjectingRemoteTier(_FaultPlanMixin, RemoteTier):
+    """A :class:`RemoteTier` whose raw blob I/O fails on command."""
+
+    def _write_blob(self, path: str, blob: bytes) -> None:
+        self._maybe_fault("put")
+        super()._write_blob(path, blob)
+
+    def _read_blob(self, path: str) -> bytes:
+        self._maybe_fault("get")
+        return super()._read_blob(path)

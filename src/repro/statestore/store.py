@@ -128,6 +128,32 @@ class StateStore:
         """A node died: wipe its in-memory replicas across all tiers."""
         return sum(t.drop_host(host) for t in self.tiers)
 
+    # ---- elastic re-layout --------------------------------------------
+    def reshard(self, shards: Any, *, step: int,
+                hosts: Optional[Any] = None,
+                tier: Optional[str] = None) -> None:
+        """A stage-layout change invalidated every stored snapshot.
+
+        Shards are cut along stage bounds, so after an elastic shrink or
+        grow the stored copies describe ranges that no longer exist — a
+        post-shrink restore from them would graft the wrong layers.  Drop
+        *everything* (all shards, all tiers), then synchronously seed
+        ``tier`` (default the fastest) with the freshly-cut ``shards``
+        (``{shard_id: tree}``) at ``step``; ``hosts`` optionally maps
+        shard ids to their new placement hosts.  Colder tiers refill at
+        their usual cadence from the strategy's ``after_step``.
+        """
+        self.flush()
+        for t in self.tiers:
+            for sid in t.shard_ids():
+                for s in list(t.steps(sid)):
+                    t.delete(sid, s)
+        target = tier or self.tiers[0].name
+        for sid, tree in shards.items():
+            self.put(tree, step=step, shard_id=sid, tier=target,
+                     host=None if hosts is None else hosts.get(sid),
+                     sync=True)
+
     # ---- restore ------------------------------------------------------
     def restore(self, shard_id: str, template: Optional[Pytree] = None, *,
                 max_step: Optional[int] = None) -> RestoreResult:

@@ -17,17 +17,44 @@ that host held — exactly what a node failure does to in-memory replicas
 from __future__ import annotations
 
 import os
+import random
 import re
 import threading
+import time
 from collections import OrderedDict
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro import telemetry
 from repro.core.walltime import TierSpec
 from repro.statestore.codec import CodecError, Snapshot, decode, encode
 
 
 class TierError(RuntimeError):
     """A tier operation failed (missing key, blob over capacity...)."""
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry with exponential backoff + jitter for transient I/O.
+
+    Only genuinely transient errors are retried (``OSError`` except
+    missing-file kinds); a corrupted blob (``CodecError``) is *data*, not
+    weather, and fails immediately so the store can fall back to the next
+    snapshot.  Each retry emits a ``tier_retry`` telemetry event; tier
+    *pricing* is untouched — a restore is priced once by the serving
+    tier's spec no matter how many attempts the physical read took.
+    """
+
+    attempts: int = 3          # total tries, including the first
+    base_delay_s: float = 0.01
+    max_delay_s: float = 0.5
+    jitter: float = 0.5        # +- fraction of the backoff randomized
+
+    def delay_s(self, attempt: int, u: float) -> float:
+        """Backoff before retry ``attempt`` (1-based), ``u`` in [0, 1)."""
+        d = min(self.base_delay_s * 2.0 ** (attempt - 1), self.max_delay_s)
+        return max(d * (1.0 + self.jitter * (2.0 * u - 1.0)), 0.0)
 
 
 class StorageTier:
@@ -61,6 +88,10 @@ class StorageTier:
 
     def steps(self, shard_id: str) -> List[int]:
         """Steps available for ``shard_id``, ascending."""
+        raise NotImplementedError
+
+    def shard_ids(self) -> List[str]:
+        """Every shard id with at least one snapshot in this tier."""
         raise NotImplementedError
 
     def has(self, shard_id: str, step: int) -> bool:
@@ -117,6 +148,9 @@ class MemoryTier(StorageTier):
     def steps(self, shard_id: str) -> List[int]:
         return sorted(s for (sid, s) in self._items if sid == shard_id)
 
+    def shard_ids(self) -> List[str]:
+        return sorted({sid for (sid, _) in self._items})
+
     def used_bytes(self) -> int:
         return sum(snap.nbytes for snap, _ in self._items.values())
 
@@ -147,10 +181,15 @@ class DiskTier(StorageTier):
     TMP_SUFFIX = ".tmp"
 
     def __init__(self, spec: TierSpec, directory: str,
-                 template: str = "{shard}-{step:08d}.npz"):
+                 template: str = "{shard}-{step:08d}.npz",
+                 retry: Optional[RetryPolicy] = RetryPolicy()):
         super().__init__(spec)
         self.dir = directory
         self.template = template
+        self.retry = retry
+        # injectable for deterministic tests (monkeypatch to skip waits)
+        self._sleep: Callable[[float], None] = time.sleep
+        self._retry_rng = random.Random(0xFA11)
         pattern = (re.escape(template)
                    .replace(re.escape("{shard}"), r"(?P<shard>[\w.]+)")
                    .replace(re.escape("{step:08d}"), r"(?P<step>\d{8})"))
@@ -190,6 +229,47 @@ class DiskTier(StorageTier):
                 removed.append(f)
         return removed
 
+    # ---- raw I/O seams (fault-injecting test tiers override these) ----
+    def _write_blob(self, path: str, blob: bytes) -> None:
+        os.makedirs(self.dir, exist_ok=True)
+        tmp = path + self.TMP_SUFFIX
+        with open(tmp, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, path)
+
+    def _read_blob(self, path: str) -> bytes:
+        with open(path, "rb") as f:
+            return f.read()
+
+    def _with_retry(self, op: str, shard_id: str, step: int,
+                    fn: Callable[[], Any]) -> Any:
+        """Run one I/O primitive under the tier's retry policy.
+
+        Transient ``OSError``s back off exponentially (with jitter) and
+        retry up to ``attempts`` total tries; a missing file is state, not
+        weather, and propagates immediately.  Exhausted retries surface as
+        :class:`TierError` so the store's fallback chain (next snapshot /
+        next tier) engages exactly like any other tier miss.
+        """
+        attempt = 1
+        while True:
+            try:
+                return fn()
+            except FileNotFoundError:
+                raise
+            except OSError as e:
+                if self.retry is None or attempt >= self.retry.attempts:
+                    raise TierError(
+                        f"tier {self.name!r} {op} {shard_id}@{step} failed "
+                        f"after {attempt} attempt(s): {e}") from e
+                delay = self.retry.delay_s(attempt,
+                                           self._retry_rng.random())
+                telemetry.emit("tier_retry", tier=self.name, op=op,
+                               shard_id=shard_id, step=step,
+                               attempt=attempt, delay_s=delay)
+                self._sleep(delay)
+                attempt += 1
+
     # ---- container contract ------------------------------------------
     def put(self, snap: Snapshot, host: Optional[int] = None) -> None:
         blob = encode(snap)
@@ -198,20 +278,17 @@ class DiskTier(StorageTier):
                 f"snapshot {snap.shard_id}@{snap.step} exceeds tier "
                 f"{self.name!r} capacity")
         with self._lock:
-            os.makedirs(self.dir, exist_ok=True)
             path = self._path(snap.shard_id, snap.step)
-            tmp = path + self.TMP_SUFFIX
-            with open(tmp, "wb") as f:
-                f.write(blob)
-            os.replace(tmp, path)
+            self._with_retry("put", snap.shard_id, snap.step,
+                             lambda: self._write_blob(path, blob))
 
     def get(self, shard_id: str, step: int) -> Snapshot:
         path = self._path(shard_id, step)
         if not os.path.exists(path):
             raise TierError(f"{shard_id}@{step} not in tier {self.name!r} "
                             f"({path} missing)")
-        with open(path, "rb") as f:
-            blob = f.read()
+        blob = self._with_retry("get", shard_id, step,
+                                lambda: self._read_blob(path))
         snap = decode(blob)  # raises CodecError on corruption
         # trust the filename over the manifest (files can be renamed)
         snap.shard_id, snap.step = shard_id, step
@@ -225,6 +302,9 @@ class DiskTier(StorageTier):
 
     def steps(self, shard_id: str) -> List[int]:
         return sorted(s for sid, s, _ in self._listing() if sid == shard_id)
+
+    def shard_ids(self) -> List[str]:
+        return sorted({sid for sid, _, _ in self._listing()})
 
     def used_bytes(self) -> int:
         if not os.path.isdir(self.dir):

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 from typing import Any, Dict, Iterable, List, Tuple
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2   # v2 adds: repartition, tier_retry
 
 _NUM = (int, float)
 _INT = (int,)
@@ -54,6 +54,11 @@ EVENT_FIELDS: Dict[str, Dict[str, Tuple[type, ...]]] = {
         "wall_step": _INT, "stage": _INT, "strategy": _STR,
         "duration_s": _NUM, "stages": (list,),
     },
+    "repartition": {
+        "wall_step": _INT, "direction": _STR,   # "shrink" | "grow"
+        "from_stages": _INT, "to_stages": _INT,
+        "moved_layers": _INT, "nbytes": _NUM, "cost_s": _NUM,
+    },
     # state store ---------------------------------------------------------
     "snapshot_save": {
         "step": _INT, "shard_id": _STR, "tier": _STR,
@@ -62,6 +67,10 @@ EVENT_FIELDS: Dict[str, Dict[str, Tuple[type, ...]]] = {
     "snapshot_restore": {
         "step": _INT, "shard_id": _STR, "tier": _STR,
         "nbytes": _INT, "read_time_s": _NUM,
+    },
+    "tier_retry": {
+        "tier": _STR, "op": _STR, "shard_id": _STR,
+        "attempt": _INT, "delay_s": _NUM,
     },
     # simulated cluster ---------------------------------------------------
     "sim_node": {"what": _STR, "step": _INT, "stage": _INT, "node_id": _INT},

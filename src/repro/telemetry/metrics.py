@@ -76,12 +76,31 @@ def compute_metrics(events: List[dict], *,
         b["measured_s"] += float(e.get("duration_s", 0.0))
     modelled = sum(float(e.get("cost_s", 0.0)) + float(e.get("overhead_s", 0.0))
                    for e in by.get("failure", ()))
+    reps = by.get("repartition", ())
     out["recovery"] = {
         "by_strategy": recovery,
         "events": len(by.get("recovery", ())),
         "failures": len(by.get("failure", ())),
         "modelled_cost_s": modelled,
+        "repartitions": len(reps),
     }
+
+    # ---- elastic re-layouts -------------------------------------------
+    out["repartition"] = {
+        "count": len(reps),
+        "shrinks": sum(1 for e in reps if e.get("direction") == "shrink"),
+        "grows": sum(1 for e in reps if e.get("direction") == "grow"),
+        "moved_layers": sum(int(e.get("moved_layers", 0)) for e in reps),
+        "moved_bytes": sum(float(e.get("nbytes", 0.0)) for e in reps),
+        "cost_s": sum(float(e.get("cost_s", 0.0)) for e in reps),
+    }
+
+    # ---- transient tier I/O retries -----------------------------------
+    retries: Dict[str, int] = {}
+    for e in by.get("tier_retry", ()):
+        key = f"{e.get('tier', '?')}/{e.get('op', '?')}"
+        retries[key] = retries.get(key, 0) + 1
+    out["tier_retries"] = retries
 
     # ---- snapshot volume per tier -------------------------------------
     tiers: Dict[str, Dict[str, Any]] = {}
@@ -193,6 +212,17 @@ def render_text(metrics: Dict[str, Any]) -> str:
             f"({_fmt_bytes(t['saved_bytes'])}), {t['restores']} restores "
             f"({_fmt_bytes(t['restored_bytes'])}, "
             f"{t['read_time_s']:.3f} s priced)")
+    rep = metrics.get("repartition") or {}
+    if rep.get("count"):
+        lines.append(f"repartitions      : {rep['count']} "
+                     f"({rep['shrinks']} shrink / {rep['grows']} grow), "
+                     f"{rep['moved_layers']} layers moved "
+                     f"({_fmt_bytes(rep['moved_bytes'])}), "
+                     f"{rep['cost_s']:.1f} s priced")
+    retries = metrics.get("tier_retries") or {}
+    if retries:
+        lines.append("tier retries      : " + ", ".join(
+            f"{k}={v}" for k, v in sorted(retries.items())))
     st = metrics.get("straggler") or {}
     if st.get("mean_stretch") is not None:
         lines.append(f"straggler stretch : mean {st['mean_stretch']:.3f}, "

@@ -1,0 +1,130 @@
+"""Chaos scenarios: failure patterns engineered to land in the trainer's
+awkward corners — back-to-back events straddling a fused-window boundary, a
+second failure arriving while the first is still being recovered at the same
+iteration boundary, and the loss of the exact node holding a neighbor
+replica — across the recovery strategy families."""
+import numpy as np
+import pytest
+
+from repro.config import (ModelConfig, OptimizerConfig, RecoveryConfig,
+                          TrainConfig)
+from repro.core.trainer import Trainer
+from repro.data.pipeline import make_batches
+from repro.models.model import build_model
+
+CFG = ModelConfig(
+    name="chaos-llama", arch_type="dense", num_layers=8, d_model=32,
+    num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=128, max_seq_len=32,
+    dtype="float32", param_dtype="float32")
+STAGES = 4
+STRATEGIES = ["checkfree", "neighbor", "tiered_ckpt", "elastic"]
+
+
+class ChaosSchedule:
+    """Forced failures with optional permanent departures."""
+
+    def __init__(self, fails, departs=None, regrows=None):
+        self._f = dict(fails)
+        self._d = dict(departs or {})
+        self._r = dict(regrows or {})
+
+    def at(self, step):
+        return self._f.get(step, [])
+
+    def departed_at(self, step):
+        return self._d.get(step, [])
+
+    def regrown_at(self, step):
+        return self._r.get(step, [])
+
+
+def run(strategy, sched, tmpdir, steps=12, fuse_window=8):
+    rcfg = RecoveryConfig(strategy=strategy, num_stages=STAGES,
+                          checkpoint_every=3, hot_every=1,
+                          checkpoint_dir=f"{tmpdir}/ckpt",
+                          store_dir=f"{tmpdir}/store")
+    tcfg = TrainConfig(global_batch=4, microbatch=4, seq_len=32, steps=steps,
+                       eval_every=100, fuse_window=fuse_window,
+                       optimizer=OptimizerConfig(lr=1e-3, total_steps=steps,
+                                                 warmup_steps=2),
+                       recovery=rcfg)
+    tr = Trainer(build_model(CFG), tcfg, schedule=sched)
+    state, hist = tr.run(make_batches(CFG, batch=4, seq=32, seed=0))
+    return tr, state, hist
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_back_to_back_failures_straddle_window_boundary(strategy, tmp_path):
+    """Failures on consecutive wall iterations force the fused window to
+    collapse to K=1 twice in a row and re-expand after."""
+    sched = ChaosSchedule({4: [1], 5: [2]})
+    tr, state, hist = run(strategy, sched, str(tmp_path))
+    assert state.effective_step == 12
+    assert [s for _, s in hist.failures] == [1, 2]
+    assert all(np.isfinite(hist.loss))
+    assert 1 in tr.dispatched_buckets   # the boundary really broke a window
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_second_failure_lands_mid_recovery(strategy, tmp_path):
+    """Two non-adjacent stages die at the same boundary: the second event
+    is processed while the first stage's freshly-recovered state is already
+    live (and, for store-backed strategies, after its host was dropped)."""
+    sched = ChaosSchedule({5: [1, 3]})
+    tr, state, hist = run(strategy, sched, str(tmp_path))
+    assert state.effective_step == 12
+    assert sorted(s for _, s in hist.failures) == [1, 3]
+    assert all(np.isfinite(hist.loss))
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_replica_holder_dies_with_its_ward(strategy, tmp_path):
+    """Adjacent stages 1 and 2 die together — stage 1's neighbor replica
+    (hosted on stage 2 under the (i+1) % K placement) goes down in the same
+    event, exercising the consecutive-run / colder-tier fallback path."""
+    sched = ChaosSchedule({6: [1, 2]})
+    tr, state, hist = run(strategy, sched, str(tmp_path))
+    assert state.effective_step == 12
+    assert sorted(s for _, s in hist.failures) == [1, 2]
+    assert all(np.isfinite(hist.loss))
+
+
+def test_elastic_back_to_back_departures(tmp_path):
+    """Two permanent departures on consecutive boundaries shrink K twice
+    (4 -> 3 -> 2) and both regrows rebalance back to 4."""
+    sched = ChaosSchedule({4: [1], 5: [2]},
+                          departs={4: [1], 5: [2]},
+                          regrows={9: [1, 2]})
+    tr, state, hist = run("elastic", sched, str(tmp_path))
+    assert state.effective_step == 12
+    assert [d for _, d, *_ in tr.repartition_log] == \
+        ["shrink", "shrink", "grow"]
+    assert [k for _, _, _, k, _, _ in tr.repartition_log] == [3, 2, 4]
+    assert tr.part.num_stages == STAGES and tr._slots == [0, 1, 2, 3]
+    assert all(np.isfinite(hist.loss))
+
+
+def test_elastic_departure_with_simultaneous_transient_failure(tmp_path):
+    """A permanent departure and an ordinary failure at the same boundary:
+    the transient stage recovers in place, the departed one is shrunk away,
+    and the survivor indices stay consistent."""
+    sched = ChaosSchedule({5: [1, 3]}, departs={5: [1]}, regrows={9: [1]})
+    tr, state, hist = run("elastic", sched, str(tmp_path))
+    assert state.effective_step == 12
+    assert sorted(s for _, s in hist.failures) == [1, 3]
+    assert [d for _, d, *_ in tr.repartition_log] == ["shrink", "grow"]
+    assert tr._slots == [0, 1, 2, 3]
+    assert all(np.isfinite(hist.loss))
+
+
+def test_elastic_failure_of_shrunk_layout_stage(tmp_path):
+    """After the shrink, a slot that survived fails: the slot -> stage
+    remap must route recovery to the right partition index."""
+    sched = ChaosSchedule({3: [2], 6: [3]}, departs={3: [2]})
+    tr, state, hist = run("elastic", sched, str(tmp_path))
+    assert state.effective_step == 12
+    # slot 3 is partition stage 2 in the shrunk [0, 1, 3] layout
+    assert tr._slots == [0, 1, 3]
+    assert sorted(s for _, s in hist.failures) == [2, 3]
+    assert all(np.isfinite(hist.loss))
+    assert hist.recovery_errors

@@ -1,0 +1,558 @@
+"""Elastic repartitioning (docs/elastic.md): variable stage layouts,
+re-layout helpers and pricing, the simulator's permanent-departure outcome,
+tier-retry policy, store re-sharding, and the trainer's live K -> K-1 -> K
+shrink/grow path end-to-end."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import telemetry
+from repro.config import (ModelConfig, OptimizerConfig, RecoveryConfig,
+                          TrainConfig)
+from repro.core.stages import (StagePartition, balanced_layer_counts,
+                               moved_layers, remap_stage_stats)
+from repro.core.swap import swap_permutation
+from repro.core.trainer import Trainer
+from repro.core.walltime import WallClockModel
+from repro.data.pipeline import make_batches
+from repro.models.model import build_model
+from repro.recovery import make_strategy
+from repro.sim import get_scenario, simulate
+from repro.statestore import (DiskTier, MemoryTier, RetryPolicy, StateStore,
+                              TierError)
+from repro.statestore.faults import (FaultInjectingDiskTier,
+                                     FaultInjectingRemoteTier)
+from repro.telemetry import Recorder
+
+
+@pytest.fixture
+def rec():
+    """A scoped in-memory recorder installed process-wide."""
+    r = Recorder(stream=False)
+    prev = telemetry.set_recorder(r)
+    try:
+        yield r
+    finally:
+        telemetry.set_recorder(prev)
+
+CFG = ModelConfig(
+    name="el-llama", arch_type="dense", num_layers=6, d_model=32,
+    num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=128, max_seq_len=32,
+    dtype="float32", param_dtype="float32")
+STAGES = 4
+SPECS = WallClockModel().tier_specs()
+
+
+class ElasticForced:
+    """Deterministic schedule exposing the elastic hooks."""
+
+    def __init__(self, fails, departs=None, regrows=None):
+        self._f = dict(fails)
+        self._d = dict(departs or {})
+        self._r = dict(regrows or {})
+
+    def at(self, step):
+        return self._f.get(step, [])
+
+    def departed_at(self, step):
+        return self._d.get(step, [])
+
+    def regrown_at(self, step):
+        return self._r.get(step, [])
+
+
+def make_trainer(strategy, steps=10, schedule=None, scenario="",
+                 num_stages=STAGES, tmpdir="/tmp/repro_elastic", seed=0):
+    rcfg = RecoveryConfig(strategy=strategy, num_stages=num_stages,
+                          scenario=scenario, seed=seed, checkpoint_every=3,
+                          checkpoint_dir=f"{tmpdir}/ckpt",
+                          store_dir=f"{tmpdir}/store")
+    tcfg = TrainConfig(global_batch=4, microbatch=4, seq_len=32, steps=steps,
+                       eval_every=100,
+                       optimizer=OptimizerConfig(lr=1e-3, total_steps=steps,
+                                                 warmup_steps=2),
+                       recovery=rcfg)
+    return Trainer(build_model(CFG), tcfg, schedule=schedule)
+
+
+def batches():
+    return make_batches(CFG, batch=4, seq=32, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# variable-layout StagePartition
+# ---------------------------------------------------------------------------
+
+def test_balanced_layer_counts():
+    assert balanced_layer_counts(6, 3) == (2, 2, 2)
+    assert balanced_layer_counts(6, 4) == (2, 2, 1, 1)
+    assert balanced_layer_counts(7, 3) == (3, 2, 2)
+    assert balanced_layer_counts(5, 5) == (1, 1, 1, 1, 1)
+    with pytest.raises(AssertionError):
+        balanced_layer_counts(3, 4)
+
+
+def test_partition_variable_bounds_cover_tower():
+    part = StagePartition(CFG, 4, layer_counts=(3, 1, 1, 1))
+    assert not part.uniform and part.layers_per_stage is None
+    bounds = [part.stage_bounds(i) for i in range(4)]
+    assert bounds == [(0, 3), (3, 4), (4, 5), (5, 6)]
+    for layer in range(6):
+        lo, hi = part.stage_bounds(part.stage_of_layer(layer))
+        assert lo <= layer < hi
+
+
+def test_partition_default_is_balanced():
+    part = StagePartition(CFG, 4)   # 6 layers over 4 stages
+    assert part.layer_counts == (2, 2, 1, 1)
+    uni = StagePartition(CFG, 3)
+    assert uni.uniform and uni.layers_per_stage == 2
+
+
+def test_partition_rejects_bad_counts():
+    with pytest.raises(AssertionError):
+        StagePartition(CFG, 3, layer_counts=(2, 2))       # wrong length
+    with pytest.raises(AssertionError):
+        StagePartition(CFG, 3, layer_counts=(4, 2, 0))    # empty stage
+    with pytest.raises(AssertionError):
+        StagePartition(CFG, 3, layer_counts=(3, 2, 2))    # wrong total
+
+
+def test_variable_get_set_roundtrip():
+    model = build_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    part = StagePartition(CFG, 3, layer_counts=(1, 3, 2))
+    stage = part.get_stage(params, 1)
+    assert jax.tree.leaves(stage)[0].shape[0] == 3
+    bumped = jax.tree.map(lambda a: a + 1.0, stage)
+    out = part.set_stage(params, 1, bumped)
+    got = part.get_stage(out, 1)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(bumped)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # untouched stages unchanged
+    for i in (0, 2):
+        for a, b in zip(jax.tree.leaves(part.get_stage(out, i)),
+                        jax.tree.leaves(part.get_stage(params, i))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_stage_grad_sqnorms_layout_aware():
+    model = build_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    uni = StagePartition(CFG, 3)
+    var = StagePartition(CFG, 3, layer_counts=(1, 3, 2))
+    per_layer = StagePartition(CFG, 6)   # one layer per stage
+    o_uni = np.asarray(uni.stage_grad_sqnorms(params))
+    o_var = np.asarray(var.stage_grad_sqnorms(params))
+    o_lay = np.asarray(per_layer.stage_grad_sqnorms(params))
+    # both layouts re-bucket the same per-layer mass
+    np.testing.assert_allclose(o_uni.sum(), o_var.sum(), rtol=1e-6)
+    np.testing.assert_allclose(o_uni, [o_lay[0:2].sum(), o_lay[2:4].sum(),
+                                       o_lay[4:6].sum()], rtol=1e-6)
+    np.testing.assert_allclose(o_var, [o_lay[0], o_lay[1:4].sum(),
+                                       o_lay[4:6].sum()], rtol=1e-6)
+
+
+def test_remap_stage_stats_conserves_mass():
+    old = StagePartition(CFG, 4)               # (2, 2, 1, 1)
+    new = StagePartition(CFG, 3)               # (2, 2, 2)
+    vals = jnp.asarray([4.0, 8.0, 3.0, 5.0])
+    out = np.asarray(remap_stage_stats(old, new, vals))
+    assert out.shape == (3,)
+    np.testing.assert_allclose(out.sum(), 20.0, rtol=1e-6)
+    # layers: old spreads [2,2,4,4,3,5]/count -> [2,2,4,4,3,5]
+    np.testing.assert_allclose(out, [4.0, 8.0, 8.0], rtol=1e-6)
+    assert remap_stage_stats(old, new, None) is None
+
+
+def test_moved_layers_counts_ownership_changes():
+    old = StagePartition(CFG, 4)               # (2, 2, 1, 1) on slots 0..3
+    new = StagePartition(CFG, 3)               # (2, 2, 2)
+    # slot 2 departed: survivors keep identities [0, 1, 3]
+    moved = moved_layers(old, [0, 1, 2, 3], new, [0, 1, 3])
+    # layers 0-3 stay on slots 0/1; layer 4 (was slot 2) and layer 5
+    # (was slot 3) both land on slot 3 -> exactly 1 layer moves
+    assert moved == 1
+    # identity re-layout moves nothing
+    assert moved_layers(old, [0, 1, 2, 3], StagePartition(CFG, 4),
+                        [0, 1, 2, 3]) == 0
+
+
+def test_swap_permutation_bounds_default_matches_uniform():
+    for n, k in [(6, 3), (8, 4), (12, 4)]:
+        lps = n // k
+        bounds = [(i * lps, (i + 1) * lps) for i in range(k)]
+        assert list(swap_permutation(n, k)) == \
+            list(swap_permutation(n, k, bounds=bounds))
+
+
+def test_swap_permutation_variable_bounds_is_permutation():
+    part = StagePartition(CFG, 3, layer_counts=(1, 3, 2))
+    perm = swap_permutation(part.num_layers, part.num_stages,
+                            bounds=[part.stage_bounds(i) for i in range(3)])
+    assert sorted(perm) == list(range(6))
+
+
+# ---------------------------------------------------------------------------
+# re-layout pricing (core/walltime)
+# ---------------------------------------------------------------------------
+
+def test_relayout_time_prices_latency_plus_transfer():
+    wall = WallClockModel(model_bytes=128e9, link_bandwidth_Bps=12.8e9,
+                          relayout_latency_s=2.0)
+    assert wall.layer_bytes(64) == 2e9
+    assert wall.relayout_time_s(0.0) == pytest.approx(2.0)
+    assert wall.relayout_time_s(12.8e9) == pytest.approx(3.0)
+    free = WallClockModel(link_bandwidth_Bps=float("inf"))
+    assert free.relayout_time_s(1e12) == free.relayout_latency_s
+
+
+# ---------------------------------------------------------------------------
+# simulator: permanent departures + regrow
+# ---------------------------------------------------------------------------
+
+def test_spot_shrink_scenario_registered():
+    sc = get_scenario("spot_shrink")
+    assert sc.rejoin == "never"
+    assert math.isfinite(sc.regrow_h)
+    with pytest.raises(AssertionError):
+        get_scenario("spot_shrink", depart_prob=1.5)
+    with pytest.raises(AssertionError):
+        get_scenario("spot_shrink", regrow_h=0.0)
+
+
+def test_departures_and_regrows_flow_through_adapter():
+    sched = simulate("spot_shrink", steps=400, seed=0, num_stages=4)
+    deps = sched.result.departures
+    regs = sched.result.regrows
+    assert deps, "spot_shrink must produce at least one departure"
+    assert regs, "finite regrow_h must return capacity"
+    for step, stage in deps:
+        assert stage in sched.at(step)           # departure is also a failure
+        assert stage in sched.departed_at(step)
+    for step, stage in regs:
+        assert stage in sched.regrown_at(step)
+    # NaN marks the departed span in the per-slot slowdowns
+    step0, stage0 = deps[0]
+    assert np.isnan(sched.result.stage_slowdowns[step0 + 1, stage0])
+
+
+def test_departed_slot_cannot_fail_until_regrow():
+    sched = simulate("spot_shrink", steps=400, seed=0, num_stages=4)
+    departed_until = {}
+    for step, stage in sched.result.departures:
+        regrow = next((rs for rs, rg in sched.result.regrows
+                       if rg == stage and rs > step), sched.result.steps)
+        for s in range(step + 1, regrow):
+            assert stage not in sched.at(s), (s, stage)
+
+
+def test_iteration_factor_active_skips_departed_slots():
+    sched = simulate("spot_shrink", steps=400, seed=0, num_stages=4)
+    step, stage = sched.result.departures[0]
+    probe = step + 1
+    survivors = [s for s in range(4) if s != stage]
+    penalty = sched.result.scenario.spare_penalty
+    # staying at K pays the spare penalty; the shrunk layout does not
+    assert sched.iteration_factor(probe) == pytest.approx(penalty)
+    assert sched.iteration_factor_active(probe, survivors) < penalty
+    # a declined shrink (departed slot kept) is priced like iter_factor
+    assert sched.iteration_factor_active(probe, list(range(4))) == \
+        pytest.approx(penalty)
+
+
+def test_depart_prob_zero_and_respawn_is_bit_identical_to_base():
+    """The departure coin must not consume RNG when the scenario cannot
+    depart: the shrink knobs are inert on every existing scenario."""
+    base = get_scenario("spot_diurnal")
+    knobbed = dataclasses.replace(base, depart_prob=0.0, regrow_h=7.5)
+    a = simulate(base, steps=800, seed=7, num_stages=5)
+    b = simulate(knobbed, steps=800, seed=7, num_stages=5)
+    assert a.result.events == b.result.events
+    assert a.result.node_log == b.result.node_log
+    np.testing.assert_array_equal(a.result.iter_factors,
+                                  b.result.iter_factors)
+    assert not a.result.departures and not b.result.departures
+
+
+def test_depart_prob_splits_outcomes():
+    sc = get_scenario("spot_diurnal", depart_prob=0.5, regrow_h=1.0)
+    sched = simulate(sc, steps=3000, seed=1, num_stages=6)
+    kinds = {k for k, *_ in sched.result.node_log}
+    assert "depart" in kinds and "fail" in kinds
+    assert sched.result.departures
+    # departures price zero overhead (no replacement to ship to)
+    for step, stage in sched.result.departures:
+        assert sched.failure_overhead(step, stage) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# tier retry (transient I/O) + fault injection
+# ---------------------------------------------------------------------------
+
+def _snap(step=1, sid="stage00"):
+    from repro.statestore import host_snapshot
+    return host_snapshot({"w": jnp.arange(4.0)}, step=step, shard_id=sid)
+
+
+def test_retry_policy_backoff_is_bounded():
+    p = RetryPolicy(attempts=4, base_delay_s=0.01, max_delay_s=0.05,
+                    jitter=0.5)
+    assert p.delay_s(1, 0.5) == pytest.approx(0.01)
+    assert p.delay_s(2, 0.5) == pytest.approx(0.02)
+    assert p.delay_s(5, 0.5) == pytest.approx(0.05)     # capped
+    assert p.delay_s(1, 0.0) == pytest.approx(0.005)    # -50% jitter
+    assert p.delay_s(1, 1.0) <= 0.015 + 1e-12
+
+
+def test_transient_put_retries_then_succeeds(tmp_path):
+    tier = FaultInjectingDiskTier(SPECS["disk"], str(tmp_path))
+    tier._sleep = lambda s: None
+    tier.inject("put", times=2)
+    tier.put(_snap())
+    assert tier.faults_remaining("put") == 0
+    assert tier.steps("stage00") == [1]
+
+
+def test_transient_get_retries_then_succeeds(tmp_path):
+    tier = FaultInjectingRemoteTier(SPECS["remote"], str(tmp_path))
+    tier._sleep = lambda s: None
+    tier.put(_snap())
+    tier.inject("get", times=1)
+    snap = tier.get("stage00", 1)
+    assert snap.step == 1
+
+
+def test_exhausted_retries_raise_tier_error(tmp_path):
+    tier = FaultInjectingDiskTier(
+        SPECS["disk"], str(tmp_path),
+        retry=RetryPolicy(attempts=2, base_delay_s=0.0))
+    tier._sleep = lambda s: None
+    tier.inject("put", times=5)
+    with pytest.raises(TierError, match="after 2 attempt"):
+        tier.put(_snap())
+
+
+def test_retry_disabled_fails_fast(tmp_path):
+    tier = FaultInjectingDiskTier(SPECS["disk"], str(tmp_path), retry=None)
+    tier.inject("put", times=1)
+    with pytest.raises(TierError, match="after 1 attempt"):
+        tier.put(_snap())
+
+
+def test_missing_file_is_not_retried(tmp_path):
+    tier = DiskTier(SPECS["disk"], str(tmp_path))
+    with pytest.raises(TierError, match="not in tier"):
+        tier.get("stage00", 1)     # existence pre-check: zero retries
+
+
+def test_retries_emit_telemetry_and_price_once(tmp_path, rec):
+    tier = FaultInjectingDiskTier(SPECS["disk"], str(tmp_path))
+    tier._sleep = lambda s: None
+    tier.inject("get", times=2)
+    tier.put(_snap())
+    snap = tier.get("stage00", 1)
+    retries = [e for e in rec.events if e["kind"] == "tier_retry"]
+    assert [e["attempt"] for e in retries] == [1, 2]
+    assert all(e["op"] == "get" and e["tier"] == "disk" for e in retries)
+    # pricing is attempt-independent: one spec-priced read
+    assert tier.read_time_s(snap.nbytes) == \
+        SPECS["disk"].read_time_s(snap.nbytes)
+
+
+def test_store_restore_survives_transient_faults(tmp_path):
+    tier = FaultInjectingDiskTier(SPECS["disk"], str(tmp_path))
+    tier._sleep = lambda s: None
+    store = StateStore([tier])
+    tree = {"w": jnp.arange(6.0)}
+    store.put(tree, step=3, shard_id="stage01", tier="disk", sync=True)
+    tier.inject("get", times=2)
+    res = store.restore("stage01", tree)
+    assert res.step == 3 and res.tier == "disk"
+    np.testing.assert_array_equal(np.asarray(res.tree["w"]),
+                                  np.arange(6.0))
+
+
+# ---------------------------------------------------------------------------
+# store re-sharding after a layout change
+# ---------------------------------------------------------------------------
+
+def test_store_reshard_drops_stale_layout(tmp_path):
+    store = StateStore([MemoryTier(SPECS["mem"]),
+                        DiskTier(SPECS["disk"], str(tmp_path))])
+    for step in (1, 2):
+        for sid in ("stage00", "stage01", "stage02", "stage03"):
+            store.put({"w": jnp.full((2,), float(step))}, step=step,
+                      shard_id=sid, tier="mem", host=0)
+            store.put({"w": jnp.full((2,), float(step))}, step=step,
+                      shard_id=sid, tier="disk")
+    store.reshard({"stage00": {"w": jnp.arange(3.0)},
+                   "stage01": {"w": jnp.arange(3.0) + 10},
+                   "stage02": {"w": jnp.arange(3.0) + 20}},
+                  step=5, hosts={"stage00": 1, "stage01": 2, "stage02": 0})
+    # old 4-shard layout is gone everywhere; only the fastest tier reseeds
+    assert store.tier("mem").shard_ids() == ["stage00", "stage01", "stage02"]
+    assert store.tier("mem").steps("stage00") == [5]
+    assert store.tier("disk").shard_ids() == []
+    for i, sid in enumerate(("stage00", "stage01", "stage02")):
+        res = store.restore(sid, {"w": jnp.zeros(3)})
+        assert res.step == 5
+        np.testing.assert_array_equal(np.asarray(res.tree["w"]),
+                                      np.arange(3.0) + 10 * i)
+
+
+def test_strategy_on_layout_change_reshards(tmp_path):
+    rcfg = RecoveryConfig(strategy="tiered_ckpt", num_stages=4,
+                          store_dir=str(tmp_path))
+    strat = make_strategy(rcfg)
+    model = build_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.core.state import TrainState
+    from repro.optim.adam import init_adam
+    state = TrainState(params, init_adam(params))
+    old = StagePartition(CFG, 4)
+    strat.bind(old)
+    strat._save_shards(state, ["mem"])
+    assert strat.store.tier("mem").shard_ids() == [
+        "stage00", "stage01", "stage02", "stage03"]
+    new = StagePartition(CFG, 3)
+    state = strat.on_layout_change(state, old, new)
+    assert strat.part is new
+    assert strat.store.tier("mem").shard_ids() == [
+        "stage00", "stage01", "stage02"]
+    # restored shard matches the *new* bounds
+    res = strat.store.restore("stage01", strat._shard_tree(state, 1))
+    for a, b in zip(jax.tree.leaves(res.tree["params"]),
+                    jax.tree.leaves(new.get_stage(state.params, 1))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    strat.on_run_end()
+
+
+# ---------------------------------------------------------------------------
+# trainer: live shrink / grow
+# ---------------------------------------------------------------------------
+
+def test_elastic_shrinks_and_rebalances(tmp_path):
+    sched = ElasticForced({3: [1]}, departs={3: [1]}, regrows={7: [1]})
+    tr = make_trainer("elastic", steps=10, schedule=sched,
+                      tmpdir=str(tmp_path))
+    state, hist = tr.run(batches())
+    assert state.effective_step == 10
+    assert [d for _, d, *_ in tr.repartition_log] == ["shrink", "grow"]
+    (s_step, _, s_from, s_to, s_moved, s_cost) = tr.repartition_log[0]
+    assert (s_step, s_from, s_to) == (3, 4, 3) and s_cost > 0
+    assert tr.part.num_stages == 4 and tr._slots == [0, 1, 2, 3]
+    assert hist.failures == [(3, 1)]
+    assert hist.recovery_errors    # the CheckFree merge reconstructed values
+    assert all(np.isfinite(hist.loss))
+
+
+def test_elastic_emits_repartition_telemetry(tmp_path, rec):
+    sched = ElasticForced({2: [2]}, departs={2: [2]}, regrows={6: [2]})
+    tr = make_trainer("elastic", steps=8, schedule=sched,
+                      tmpdir=str(tmp_path))
+    tr.run(batches())
+    events = rec.events
+    reps = [e for e in events if e["kind"] == "repartition"]
+    assert [e["direction"] for e in reps] == ["shrink", "grow"]
+    assert reps[0]["from_stages"] == 4 and reps[0]["to_stages"] == 3
+    assert reps[1]["from_stages"] == 3 and reps[1]["to_stages"] == 4
+    from repro.telemetry.events import validate_record
+    assert not [p for e in reps for p in validate_record(e)]
+    from repro.telemetry.metrics import compute_metrics
+    m = compute_metrics(events)
+    assert m["repartition"]["count"] == 2
+    assert m["repartition"]["shrinks"] == 1
+    assert m["recovery"]["repartitions"] == 2
+
+
+def test_elastic_never_shrinks_below_two_stages(tmp_path):
+    sched = ElasticForced({1: [1], 3: [0], 5: [1]},
+                          departs={1: [1], 3: [0], 5: [1]})
+    tr = make_trainer("elastic", steps=8, schedule=sched,
+                      tmpdir=str(tmp_path), num_stages=3)
+    state, hist = tr.run(batches())
+    assert state.effective_step == 8
+    # 3 -> 2 once; the later departures recover in place (K floor)
+    assert [d for _, d, *_ in tr.repartition_log] == ["shrink"]
+    assert tr.part.num_stages == 2
+    assert all(np.isfinite(hist.loss))
+
+
+def test_elastic_matches_checkfree_without_departures(tmp_path):
+    """Acceptance: bit-identical traces when no departure occurs."""
+    fails = {3: [1], 6: [2]}
+    tr_e = make_trainer("elastic", steps=10,
+                        schedule=ElasticForced(fails),
+                        tmpdir=str(tmp_path / "e"))
+    st_e, h_e = tr_e.run(batches())
+    tr_c = make_trainer("checkfree", steps=10,
+                        schedule=ElasticForced(fails),
+                        tmpdir=str(tmp_path / "c"))
+    st_c, h_c = tr_c.run(batches())
+    assert not tr_e.repartition_log
+    assert h_e.loss == h_c.loss
+    assert h_e.failures == h_c.failures
+    assert h_e.recovery_errors == h_c.recovery_errors
+    for a, b in zip(jax.tree.leaves(st_e.params),
+                    jax.tree.leaves(st_c.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_elastic_end_to_end_spot_shrink(tmp_path):
+    """Acceptance: a simulated spot_shrink run completes training through a
+    K -> K-1 repartition, rebalances to K on regrow, loss decreasing."""
+    tr = make_trainer("elastic", steps=30, scenario="spot_shrink",
+                      tmpdir=str(tmp_path), seed=0)
+    state, hist = tr.run(batches())
+    assert state.effective_step == 30
+    directions = [d for _, d, *_ in tr.repartition_log]
+    assert "shrink" in directions and "grow" in directions
+    assert tr.part.num_stages == STAGES
+    assert np.mean(hist.loss[-5:]) < np.mean(hist.loss[:5])
+
+
+def test_shrunk_layout_paces_by_survivors(tmp_path):
+    """After the shrink the spare penalty stops stretching iterations."""
+    tr = make_trainer("elastic", steps=30, scenario="spot_shrink",
+                      tmpdir=str(tmp_path / "e"), seed=0)
+    _, h_e = tr.run(batches())
+    tr_c = make_trainer("checkfree", steps=30, scenario="spot_shrink",
+                        tmpdir=str(tmp_path / "c"), seed=0)
+    _, h_c = tr_c.run(batches())
+    assert tr.repartition_log and not getattr(tr_c, "repartition_log", [])
+    # checkfree limps on the penalized spare for the whole departed span;
+    # elastic pays a one-time re-layout and then runs at survivor pace
+    span_e = h_e.wall_time[-1] - h_e.wall_time[0]
+    span_c = h_c.wall_time[-1] - h_c.wall_time[0]
+    assert span_e < span_c
+
+
+def test_adaptive_prices_repartition_decision(tmp_path):
+    tr = make_trainer("adaptive", steps=30, scenario="spot_shrink",
+                      tmpdir=str(tmp_path), seed=0)
+    state, hist = tr.run(batches())
+    assert state.effective_step == 30
+    decisions = tr.strategy.repartition_decisions
+    assert decisions
+    for _, accept, relayout_s, stay_s in decisions:
+        assert accept == (relayout_s <= stay_s)
+    accepted = [d for d in decisions if d[1]]
+    assert len(tr.repartition_log) >= len(accepted)
+
+
+def test_elastic_flag_ignored_on_spmd_style_fixed_mesh(tmp_path):
+    """A non-repartition strategy never consults the elastic hooks even
+    when the schedule offers departures."""
+    sched = ElasticForced({3: [1]}, departs={3: [1]}, regrows={7: [1]})
+    tr = make_trainer("checkfree", steps=10, schedule=sched,
+                      tmpdir=str(tmp_path))
+    state, hist = tr.run(batches())
+    assert state.effective_step == 10
+    assert not tr._allow_repartition
+    assert not tr.repartition_log
+    assert tr.part.num_stages == STAGES

@@ -115,7 +115,8 @@ def test_event_stream_writes_jsonl(tmp_path):
     assert [e["kind"] for e in events] == ["log", "sim_node"]
     assert validate_events(events) == []
     # the envelope is stamped on every record
-    assert all(e["v"] == 1 and e["t_s"] >= 0.0 for e in events)
+    from repro.telemetry.events import SCHEMA_VERSION
+    assert all(e["v"] == SCHEMA_VERSION and e["t_s"] >= 0.0 for e in events)
     # events also feed the per-kind counters
     assert r.counters["events.log"] == 1
 
